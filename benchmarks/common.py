@@ -1,0 +1,37 @@
+"""Shared benchmark harness: timing, CSV emission, workload scaling.
+
+Paper workloads are 10m-1b ops on a 128-core Milan node; this container is a
+1-core CPU running JAX, so workloads scale down (SCALE notes the factor per
+table) while preserving every comparison's STRUCTURE (thread count -> batch
+width, implementation pairs, workload mixes). Times are wall-clock over
+jitted steps after warmup.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def bench(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall seconds per call of a jitted fn (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds_per_call: float, derived: str):
+    print(f"{name},{seconds_per_call * 1e6:.1f},{derived}", flush=True)
+
+
+def keys64(rng, n):
+    import jax.numpy as jnp
+    return jnp.asarray(rng.integers(1, 2**62, n, dtype=np.uint64))

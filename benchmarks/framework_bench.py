@@ -1,0 +1,73 @@
+"""Framework-level benchmarks (beyond the paper's tables):
+
+serving  — continuous-batching engine tokens/sec on the reduced qwen3 config
+           (paged pool + skiplist scheduler + ring queue end to end)
+store    — sharded ordered-store ops/sec (single shard degenerate mesh)
+train    — reduced-config train-step steps/sec (the e2e substrate check)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig
+from repro.models import model as M
+
+
+def run():
+    cfg = get_reduced("qwen3-1.7b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    # --- serving ---
+    from repro.serving.engine import Engine, Request
+    rng = np.random.default_rng(0)
+    eng = Engine(cfg, params, max_reqs=8, num_pages=128, page_size=8,
+                 max_pages_per_req=16)
+    for i in range(8):
+        eng.submit(Request(req_id=i, prompt=rng.integers(1, cfg.vocab_size, 8),
+                           max_new=16, priority=i % 3))
+    t0 = time.perf_counter()
+    outs = eng.run(max_steps=64)
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in outs.values())
+    emit("framework/serving_engine", dt / max(toks, 1),
+         f"tokens_per_sec={toks/dt:.1f};requests=8")
+
+    # --- train step ---
+    from repro.data.pipeline import synth_batch
+    from repro.optim.adamw import adamw_init
+    from repro.train.step import make_train_step
+    shape = ShapeConfig("bench", seq_len=64, global_batch=8, kind="train")
+    step = jax.jit(make_train_step(cfg, microbatches=2))
+    opt = {"adam": adamw_init(params)}
+    batch = synth_batch(cfg, shape, 0, 0)
+    p2 = params
+
+    def one(p, o):
+        p, o, m = step(p, o, batch)
+        return p, o, m
+
+    t = bench(lambda: one(p2, opt), iters=3)
+    tokens = shape.global_batch * shape.seq_len
+    emit("framework/train_step_reduced", t,
+         f"tokens_per_sec={tokens/t:.1f};microbatches=2")
+
+    # --- skiplist kernel vs pure-jnp find path ---
+    from repro.core.det_skiplist import find_batch, insert_batch, skiplist_init
+    from repro.kernels.skiplist_search.ops import skiplist_search
+    s = skiplist_init(1 << 13)
+    ks = jnp.asarray(rng.integers(1, 2**62, 4096, dtype=np.uint64))
+    s, _, _ = insert_batch(s, ks, ks)
+    q = ks[:512]
+    jf = jax.jit(lambda s, q: find_batch(s, q)[0])
+    kf = jax.jit(lambda s, q: skiplist_search(s, q, tile=256)[0])
+    t_j = bench(lambda: jf(s, q))
+    t_k = bench(lambda: kf(s, q))
+    emit("framework/skiplist_find_jnp", t_j / 512, f"ops_per_sec={512/t_j:.3e}")
+    emit("framework/skiplist_find_kernel(interp)", t_k / 512,
+         f"ops_per_sec={512/t_k:.3e};note=interpret-mode-CPU")

@@ -1,0 +1,19 @@
+"""Benchmark harness: one module per paper table (+ framework benches).
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §7 index).
+"""
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    import repro  # noqa: F401
+    print("name,us_per_call,derived")
+    from benchmarks import (framework_bench, table1_queues, table2_3_skiplist,
+                            table4_det_vs_rand, table5_8_hashes)
+    for mod in (table1_queues, table2_3_skiplist, table4_det_vs_rand,
+                table5_8_hashes, framework_bench):
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

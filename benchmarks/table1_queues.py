@@ -1,0 +1,73 @@
+"""Paper Table I / fig 3: concurrent queue throughput vs thread count.
+
+threads -> batch lanes. Three implementations:
+  lkfree    — our LCRQ-adapted block queue with recycling (§III)
+  serial    — one-op-at-a-time lax.scan (the coarse-lock/Boost analogue)
+  py_deque  — host Python deque (the non-vectorized reference)
+Workload: alternating push/pop rounds, ~50/50, total_ops per measurement.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit
+from repro.core.ringqueue import pop_batch, push_batch, queue_init
+
+TOTAL_OPS = 1 << 17        # scaled from the paper's 100m (x~760 down)
+LANES = [4, 8, 16, 32, 64, 128]
+
+
+def run():
+    for lanes in LANES:
+        q0 = queue_init(max_blocks=64, block_size=1024)
+        vals = jnp.arange(lanes, dtype=jnp.uint64)
+        ones = jnp.ones((lanes,), bool)
+
+        @jax.jit
+        def round_(q):
+            q, _ = push_batch(q, vals, ones)
+            q, _, _ = pop_batch(q, lanes)
+            return q
+
+        rounds = TOTAL_OPS // (2 * lanes)
+
+        def run_rounds(q):
+            for _ in range(64):
+                q = round_(q)
+            return q
+
+        t = bench(run_rounds, q0, iters=3)
+        per_op = t / (64 * 2 * lanes)
+        emit(f"table1/lkfree/threads={lanes}", per_op,
+             f"ops_per_sec={1.0/per_op:.3e};total_ops={TOTAL_OPS}")
+
+    # serialized (one op per device step) — the contended-lock analogue
+    q0 = queue_init(max_blocks=64, block_size=1024)
+
+    @jax.jit
+    def serial_round(q):
+        q, _ = push_batch(q, jnp.ones((1,), jnp.uint64), jnp.ones((1,), bool))
+        q, _, _ = pop_batch(q, 1)
+        return q
+
+    def run_serial(q):
+        for _ in range(64):
+            q = serial_round(q)
+        return q
+
+    t = bench(run_serial, q0, iters=3)
+    per_op = t / (64 * 2)
+    emit("table1/serial/threads=1", per_op, f"ops_per_sec={1.0/per_op:.3e}")
+
+    # host deque reference
+    from collections import deque
+    import time as _t
+    d = deque()
+    t0 = _t.perf_counter()
+    for i in range(TOTAL_OPS // 2):
+        d.append(i)
+        d.popleft()
+    t = (_t.perf_counter() - t0) / TOTAL_OPS
+    emit("table1/py_deque/threads=1", t, f"ops_per_sec={1.0/t:.3e}")

@@ -1,0 +1,82 @@
+"""Paper Tables II+III / figs 4-5: deterministic skiplist throughput.
+
+Workload1: 10% insert / 90% find; Workload2: + erases (paper: 0.2%, here 2%
+so the erase path actually registers at scaled size).
+  lkfreefind — batched ops (vectorized lock-free Find + bulk linearized
+               updates): the paper's lock-free-find implementation analogue
+  RWL        — serialized one-op-at-a-time (reader-writer-lock analogue)
+Sweep batch width ("threads").
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit, keys64
+from repro.core.det_skiplist import (delete_batch, find_batch, insert_batch,
+                                     skiplist_init)
+
+CAP = 1 << 14
+PRELOAD = CAP // 2
+LANES = [4, 8, 16, 32, 64, 128]
+ROUNDS = 16
+
+
+def _preloaded(rng):
+    s = skiplist_init(CAP)
+    ks = keys64(rng, PRELOAD)
+    s, _, _ = insert_batch(s, ks, ks)
+    return s, ks
+
+
+def _mixed_round(cfg_erase: bool):
+    def round_(s, ins_k, find_k, del_k):
+        s, _, _ = insert_batch(s, ins_k, ins_k)
+        f, v, _ = find_batch(s, find_k)
+        if cfg_erase:
+            s, _ = delete_batch(s, del_k)
+        return s, jnp.sum(f)
+    return jax.jit(round_)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for workload, erase in (("wl1", False), ("wl2", True)):
+        for lanes in LANES:
+            s, base = _preloaded(rng)
+            n_ins = max(1, lanes // 10)
+            n_del = max(1, lanes // 50) if erase else 1
+            round_ = _mixed_round(erase)
+            ins_k = keys64(rng, n_ins)
+            find_k = jnp.asarray(np.asarray(base)[
+                rng.integers(0, PRELOAD, lanes - n_ins)])
+            del_k = jnp.asarray(np.asarray(base)[
+                rng.integers(0, PRELOAD, n_del)])
+
+            def steps(s):
+                for _ in range(ROUNDS):
+                    s, f = round_(s, ins_k, find_k, del_k)
+                return s
+
+            t = bench(steps, s, iters=3)
+            ops = ROUNDS * (n_ins + (lanes - n_ins) + (n_del if erase else 0))
+            per_op = t / ops
+            emit(f"table2_3/lkfreefind/{workload}/threads={lanes}", per_op,
+                 f"ops_per_sec={1.0/per_op:.3e}")
+
+    # RWL analogue: one op per jit step
+    s, base = _preloaded(rng)
+    one = _mixed_round(False)
+    k1 = keys64(rng, 1)
+    f1 = jnp.asarray(np.asarray(base)[:1])
+
+    def serial(s):
+        for _ in range(ROUNDS):
+            s, f = one(s, k1, f1, f1)
+        return s
+
+    t = bench(serial, s, iters=3)
+    per_op = t / (ROUNDS * 2)
+    emit("table2_3/RWL/wl1/threads=1", per_op,
+         f"ops_per_sec={1.0/per_op:.3e}")

@@ -1,0 +1,58 @@
+"""Paper Table IV / fig 6: deterministic 1-2-3-4 skiplist vs randomized
+skiplist — the comparison whose verdict the hardware flips.
+
+Paper (CPU, locks): randomized wins (no rebalancing, lock-free).
+Here (SIMD lanes): the deterministic fan-out-4 probe is one fixed-shape
+gather per level; the randomized variant pads every lane to MAX_GAP probes.
+We measure batched find + insert throughput and report the probe-width
+ratio as `derived` context.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit, keys64
+from repro.core import rand_skiplist as rsl
+from repro.core.det_skiplist import find_batch, insert_batch, skiplist_init
+
+CAP = 1 << 14
+PRELOAD = CAP // 2
+LANES = [8, 32, 128, 512]
+ROUNDS = 8
+
+
+def run():
+    rng = np.random.default_rng(1)
+    base = keys64(rng, PRELOAD)
+
+    det = skiplist_init(CAP)
+    det, _, _ = insert_batch(det, base, base)
+    rnd = rsl.rand_skiplist_init(CAP)
+    rnd, _, _ = rsl.insert_batch(rnd, base, base)
+
+    for lanes in LANES:
+        queries = jnp.asarray(np.asarray(base)[rng.integers(0, PRELOAD, lanes)])
+
+        df = jax.jit(lambda s, q: find_batch(s, q)[0])
+        rf = jax.jit(lambda s, q: rsl.find_batch(s, q)[0])
+
+        t_d = bench(lambda: df(det, queries))
+        t_r = bench(lambda: rf(rnd, queries))
+        emit(f"table4/det_find/threads={lanes}", t_d / lanes,
+             f"ops_per_sec={lanes/t_d:.3e};probe_width=4")
+        emit(f"table4/rand_find/threads={lanes}", t_r / lanes,
+             f"ops_per_sec={lanes/t_r:.3e};probe_width={rsl.MAX_GAP};"
+             f"speedup_det={t_r/t_d:.2f}x")
+
+    # bulk insert comparison (rebalance cost vs level re-derivation)
+    newk = keys64(rng, 256)
+    di = jax.jit(lambda s, k: insert_batch(s, k, k)[0])
+    ri = jax.jit(lambda s, k: rsl.insert_batch(s, k, k)[0])
+    t_d = bench(lambda: di(det, newk))
+    t_r = bench(lambda: ri(rnd, newk))
+    emit("table4/det_insert/batch=256", t_d / 256,
+         f"ops_per_sec={256/t_d:.3e}")
+    emit("table4/rand_insert/batch=256", t_r / 256,
+         f"ops_per_sec={256/t_r:.3e};det_speedup={t_r/t_d:.2f}x")

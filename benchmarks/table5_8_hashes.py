@@ -1,0 +1,112 @@
+"""Paper Tables V-VIII / figs 7-9: hash-table comparisons.
+
+table5: fixed-slot vs two-level (threshold expansion) — 50% insert/50% find
+table6: one-level vs two-level split-order — wall time + the bytes-touched
+        locality proxy standing in for the paper's cache-miss counters
+table7/8: two-level-bucket vs split-order vs two-level split-order at two
+        workload sizes (the paper's three-way final comparison)
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, emit, keys64
+from repro.core.hashtable import (fixed_find, fixed_init, fixed_insert,
+                                  twolevel_find, twolevel_init, twolevel_insert)
+from repro.core.splitorder import (splitorder_find, splitorder_init,
+                                   splitorder_insert, twolevel_splitorder_find,
+                                   twolevel_splitorder_init,
+                                   twolevel_splitorder_insert)
+
+LANES = [16, 64, 256]
+ROUNDS = 8
+
+
+def _mix(insert_fn, find_fn, state, ins_k, find_k):
+    def round_(st):
+        st, _, _ = insert_fn(st, ins_k, ins_k)
+        f, _ = find_fn(st, find_k)
+        return st, jnp.sum(f)
+    return jax.jit(round_)
+
+
+def _sweep(name, init_state, insert_fn, find_fn, rng, extra=""):
+    for lanes in LANES:
+        st = init_state()
+        ins_k = keys64(rng, lanes // 2)
+        st, _, _ = insert_fn(st, ins_k, ins_k)     # warm content
+        find_k = ins_k[jnp.asarray(rng.integers(0, lanes // 2, lanes // 2))]
+        round_ = _mix(insert_fn, find_fn, st, ins_k, find_k)
+
+        def steps(st):
+            for _ in range(ROUNDS):
+                st, f = round_(st)
+            return st
+
+        t = bench(steps, st, iters=3)
+        per_op = t / (ROUNDS * lanes)
+        emit(f"{name}/threads={lanes}", per_op,
+             f"ops_per_sec={1.0/per_op:.3e}{extra}")
+
+
+def run():
+    rng = np.random.default_rng(2)
+    # --- table 5: fixed vs two-level ---
+    _sweep("table5/fixed", lambda: fixed_init(1024, 16),
+           fixed_insert, fixed_find, rng)
+    _sweep("table5/twolevel", lambda: twolevel_init(256, 8, 64, 8, 256),
+           twolevel_insert, twolevel_find, rng)
+
+    # under load: the paper's point — fixed buckets overflow (failed inserts)
+    # while threshold expansion absorbs them
+    n = 2048
+    ks = keys64(rng, n)
+    hf = fixed_init(64, 16)                      # capacity 1024 < n
+    hf, insf, _ = fixed_insert(hf, ks, ks)
+    ht = twolevel_init(64, 8, 64, 8, 128)        # expands per slot
+    ht, inst, _ = twolevel_insert(ht, ks, ks)
+    emit("table5/fixed/load=2x", 0.0,
+         f"insert_fail_rate={1 - float(insf.mean()):.3f}")
+    emit("table5/twolevel/load=2x", 0.0,
+         f"insert_fail_rate={1 - float(inst.mean()):.3f};"
+         f"l2_tables={int((np.asarray(ht.l2_block) >= 0).sum())}")
+
+    # --- table 6: split-order locality ---
+    n_entries = 4096
+    so = splitorder_init(8192, 64, max_load=16)
+    t2 = twolevel_splitorder_init(16, 1024, 8, max_load=16)
+    ks = keys64(rng, n_entries)
+    for chunk in np.array_split(np.asarray(ks), 8):
+        so, _, _ = splitorder_insert(so, jnp.asarray(chunk), jnp.asarray(chunk))
+        t2, _, _ = twolevel_splitorder_insert(t2, jnp.asarray(chunk),
+                                              jnp.asarray(chunk))
+    q = ks[jnp.asarray(rng.integers(0, n_entries, 256))]
+    f1 = jax.jit(lambda h, q: splitorder_find(h, q)[0])
+    f2 = jax.jit(lambda h, q: twolevel_splitorder_find(h, q)[0])
+    t_1 = bench(lambda: f1(so, q))
+    t_2 = bench(lambda: f2(t2, q))
+    # locality proxy: binary-search touch count x 8B (the cache-miss stand-in)
+    touch1 = math.log2(n_entries) * 8
+    touch2 = math.log2(n_entries / 16) * 8
+    emit("table6/splitorder_1lvl/find256", t_1 / 256,
+         f"ops_per_sec={256/t_1:.3e};bytes_touched_per_find={touch1:.0f}")
+    emit("table6/splitorder_2lvl/find256", t_2 / 256,
+         f"ops_per_sec={256/t_2:.3e};bytes_touched_per_find={touch2:.0f};"
+         f"speedup={t_1/t_2:.2f}x")
+
+    # --- tables 7/8: three-way ---
+    for tag, total in (("table7(100m-scaled)", 1 << 12), ("table8(1b-scaled)", 1 << 14)):
+        rng2 = np.random.default_rng(3)
+        _sweep(f"{tag}/BinLists(two-level-bucket)",
+               lambda: twolevel_init(256, 8, 64, 8, 512),
+               twolevel_insert, twolevel_find, rng2)
+        _sweep(f"{tag}/SPO(split-order)",
+               lambda: splitorder_init(total * 2, 64, max_load=16),
+               splitorder_insert, splitorder_find, rng2)
+        _sweep(f"{tag}/2lvl-SPO",
+               lambda: twolevel_splitorder_init(16, total // 4, 8, max_load=16),
+               twolevel_splitorder_insert, twolevel_splitorder_find, rng2)

@@ -1,0 +1,11 @@
+"""repro — JAX/TPU framework built around the concurrent-data-structures paper.
+
+64-bit keys are first-class citizens (the paper packs 64-bit keys + 64-bit
+pointers into 128-bit atomic words); we enable x64 globally and keep all model
+code on explicit int32/bf16/f32 dtypes.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

@@ -1,0 +1,35 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own).
+
+get_config(name)          -> full assigned ModelConfig
+get_reduced(name)         -> same-family tiny config for CPU smoke tests
+ARCHS                     -> all assigned arch names
+"""
+from importlib import import_module
+
+ARCHS = [
+    "llava-next-mistral-7b",
+    "qwen3-moe-235b-a22b",
+    "llama4-scout-17b-a16e",
+    "qwen3-1.7b",
+    "llama3-405b",
+    "minicpm3-4b",
+    "qwen1.5-110b",
+    "xlstm-1.3b",
+    "hymba-1.5b",
+    "musicgen-medium",
+]
+ALL = ARCHS + ["paper-kvstore"]
+
+_MOD = {n: n.replace("-", "_").replace(".", "_") for n in ALL}
+
+
+def _module(name: str):
+    return import_module(f"repro.configs.{_MOD[name]}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str):
+    return _module(name).reduced()

@@ -1,0 +1,130 @@
+"""Config schema: one frozen dataclass covers all 10 assigned architectures
+plus the paper's own KV-store service config.
+
+Every assigned arch file defines `CONFIG` (exact assignment numbers) and
+`reduced()` (same family, tiny dims) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|vlm|audio|kvstore
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- attention ---
+    attn_type: str = "gqa"           # gqa|mla
+    qk_norm: bool = False            # qwen3
+    qkv_bias: bool = False           # qwen1.5
+    rope_theta: float = 1e4
+    sliding_window: int = 0          # 0 = full attention (hymba: >0)
+    global_attn_every: int = 0       # hymba: every k-th layer full attn
+
+    # --- MLA (minicpm3) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_active: int = 0        # top-k
+    d_expert: int = 0                # expert FFN width
+    n_shared_experts: int = 0        # llama4 shared expert
+    norm_topk_prob: bool = True
+    moe_impl: str = "replicated_psum"   # or "routed_a2a" (the paper's routing)
+    moe_capacity_factor: float = 2.0    # dispatch-buffer budget (§Perf lever)
+
+    # --- SSM / xLSTM / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0             # xlstm: every k-th block is sLSTM
+    block_pattern: str = "transformer"  # transformer|xlstm|hybrid
+
+    # --- modality frontends (stubs per assignment) ---
+    n_codebooks: int = 0             # musicgen EnCodec codebooks
+    frontend_tokens: int = 0         # vlm/audio: precomputed prefix embeddings
+
+    # --- numerics / structure ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    vocab_pad_to: int = 256
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_impl: str = "xla"           # xla | pallas (TPU) | pallas_interpret
+    attn_block_q: int = 512          # q-chunking for the XLA attention path
+    scan_chunk: int = 256            # mLSTM/mamba chunk length
+    kv_cache_dtype: str = "bfloat16"  # or "float8_e4m3fn": §Perf decode lever
+    ssm_scan_dtype: str = "float32"   # or "bfloat16": SSM hidden-state traffic
+    decode_shard: str = "batch"       # or "seq2d": replicate batch, shard the
+                                      # cache seq dim over BOTH axes (weights
+                                      # stay stationary — decode comm lever)
+    pod_compress: bool = False        # int8 error-feedback gradient exchange
+                                      # on the pod (DCI) axis — multi-pod lever
+    # (roofline probes unroll by setting these >= seq_len + scan_layers=False)
+
+    # --- kvstore (the paper's own architecture) ---
+    store_capacity: int = 0
+    store_lanes: int = 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return -(-self.vocab_size // p) * p
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic/recurrent decode state);
+# pure full-attention archs skip it (DESIGN.md §5)
+LONG_CONTEXT_OK = {"xlstm-1.3b", "hymba-1.5b"}
+
+
+def cells_for(arch_name: str) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_OK or arch_name == "paper-kvstore":
+        out.append("long_500k")
+    return out

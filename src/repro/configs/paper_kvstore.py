@@ -1,0 +1,11 @@
+"""The paper's own architecture: the sharded ordered-set (skiplist) service
+(§VI) as a dry-run config — store_step lowers on the production meshes."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-kvstore", family="kvstore",
+    store_capacity=65536, store_lanes=4096,
+)
+
+def reduced():
+    return CONFIG.replace(store_capacity=512, store_lanes=32)

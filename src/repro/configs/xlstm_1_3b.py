@@ -1,0 +1,16 @@
+"""xlstm-1.3b [ssm]: sLSTM + mLSTM blocks, 7:1 ratio (xLSTM[7:1]).
+d_ff=0 per assignment: mixing blocks carry their own up/down projections.
+[arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, block_pattern="xlstm", slstm_every=8,
+    ssm_expand=2, ssm_conv=4,
+)
+
+
+def reduced():
+    return CONFIG.replace(n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+                          vocab_size=512, vocab_pad_to=64, slstm_every=4)

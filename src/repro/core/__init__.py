@@ -1,0 +1,12 @@
+"""Core data structures — the paper's contribution, TPU-native.
+
+bits          key packing, splitmix64, bit reversal, geometric heights
+blockpool     §V memory manager: id pool + free ring + ABA generations
+ringqueue     §III LCRQ-adapted block queue with recycling
+det_skiplist  §II deterministic 1-2-3-4 skiplist (the primary contribution)
+rand_skiplist §VI randomized comparator (table IV)
+hashtable     §VII fixed-slot + two-level MWMR tables
+splitorder    §VII split-order + two-level split-order tables
+routing       §I/§VI hierarchical NUMA->mesh key routing (all-to-all)
+ordered_sharded  sharded ordered-set service (routing + skiplist)
+"""

@@ -1,0 +1,109 @@
+"""Key/bit utilities shared by every core data structure.
+
+The paper stores a 64-bit key and a 64-bit next-pointer in one 128-bit atomic
+word and extracts the halves with bit masks. In a functional setting we keep
+keys as plain uint64 and, where the paper packs (key, pointer), we pack
+(key_hi32 | payload_lo32) or keep parallel arrays updated in a single scatter
+(the linearization point).
+
+splitmix64 is the hash used everywhere (the paper scrambles 64-bit integers
+with Boost hash functions); bit-reversal implements split-ordering (§VII).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinels: the paper's head key is 2**64 - 1 and sentinel tail nodes point to
+# themselves. We reserve the max key as +inf padding ("tail") and max-1 as the
+# largest storable key.
+KEY_INF = jnp.uint64(0xFFFFFFFFFFFFFFFF)
+KEY_MAX = jnp.uint64(0xFFFFFFFFFFFFFFFE)
+EMPTY = KEY_INF  # empty hash-table slot marker
+
+_U = jnp.uint64
+
+
+def splitmix64(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix64 finalizer — a high-quality 64-bit scrambler."""
+    x = x.astype(jnp.uint64)
+    x = x + _U(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> _U(30))) * _U(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> _U(27))) * _U(0x94D049BB133111EB)
+    x = x ^ (x >> _U(31))
+    return x
+
+
+def hash64(x: jnp.ndarray) -> jnp.ndarray:
+    return splitmix64(x)
+
+
+def bitrev64(x: jnp.ndarray) -> jnp.ndarray:
+    """Reverse the bits of a uint64 (split-ordering: sort keys by reversed hash).
+
+    log-step swap network — 6 vector ops, no loops.
+    """
+    x = x.astype(jnp.uint64)
+    x = ((x & _U(0x5555555555555555)) << _U(1)) | ((x & _U(0xAAAAAAAAAAAAAAAA)) >> _U(1))
+    x = ((x & _U(0x3333333333333333)) << _U(2)) | ((x & _U(0xCCCCCCCCCCCCCCCC)) >> _U(2))
+    x = ((x & _U(0x0F0F0F0F0F0F0F0F)) << _U(4)) | ((x & _U(0xF0F0F0F0F0F0F0F0)) >> _U(4))
+    x = ((x & _U(0x00FF00FF00FF00FF)) << _U(8)) | ((x & _U(0xFF00FF00FF00FF00)) >> _U(8))
+    x = ((x & _U(0x0000FFFF0000FFFF)) << _U(16)) | ((x & _U(0xFFFF0000FFFF0000)) >> _U(16))
+    x = (x << _U(32)) | (x >> _U(32))
+    return x
+
+
+def geometric_height(key: jnp.ndarray, max_height: int, p_shift: int = 2) -> jnp.ndarray:
+    """Random-skiplist node height from the key's hash: P(h >= j) = (1/4)^j.
+
+    Counts consecutive zero 2-bit groups from the LSB of splitmix64(key) —
+    the deterministic-by-hash analogue of the paper's RNG-driven node heights
+    (level j+1 with probability (1/t)^j, t = 4).
+    """
+    h = splitmix64(key)
+    height = jnp.zeros(key.shape, dtype=jnp.int32)
+    alive = jnp.ones(key.shape, dtype=bool)
+    for j in range(max_height):
+        bits = (h >> _U(p_shift * j)) & _U((1 << p_shift) - 1)
+        alive = alive & (bits == _U(0))
+        height = height + alive.astype(jnp.int32)
+    return height  # 0-based extra height above the terminal level
+
+
+def pack_key_payload(key_hi32: jnp.ndarray, payload: jnp.ndarray) -> jnp.ndarray:
+    """Pack a 32-bit key tag and 32-bit payload into one uint64 (analogue of the
+    paper's 128-bit key|next word, halved for TPU-friendly widths)."""
+    return (key_hi32.astype(jnp.uint64) << _U(32)) | (payload.astype(jnp.uint64) & _U(0xFFFFFFFF))
+
+
+def unpack_key_payload(word: jnp.ndarray):
+    return (word >> _U(32)).astype(jnp.uint32), (word & _U(0xFFFFFFFF)).astype(jnp.uint32)
+
+
+def dup_in_run(same_as_prev: jnp.ndarray, masked: jnp.ndarray) -> jnp.ndarray:
+    """In-batch duplicate mask over a SORTED batch: True for every masked lane
+    that is not the FIRST MASKED lane of its equal-key run.
+
+    `same_as_prev[i]` says lane i has the same key(s) as lane i-1 (with
+    same_as_prev[0] == False). Counting only masked lanes matters: a run can
+    interleave masked and unmasked lanes (e.g. a FIND lane between two
+    DELETE lanes for the same key) and the first *masked* lane must win —
+    this is the deterministic linearization tie-break.
+    """
+    import jax
+
+    idx = jnp.arange(same_as_prev.shape[0], dtype=jnp.int32)
+    run_first = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(~same_as_prev, idx, -1))
+    c = jnp.cumsum(masked.astype(jnp.int32))
+    m_i = masked.astype(jnp.int32)
+    before = c[run_first] - m_i[run_first]
+    rank = c - m_i - before
+    return masked & (rank > 0)
+
+
+def make_priority_key(priority: jnp.ndarray, ticket: jnp.ndarray) -> jnp.ndarray:
+    """(priority, ticket) -> orderable u64: priority in high 32, ticket low 32.
+
+    Used by the serving scheduler's skiplist index; ticket breaks ties
+    deterministically (the linearization order)."""
+    return (priority.astype(jnp.uint64) << _U(32)) | (ticket.astype(jnp.uint64) & _U(0xFFFFFFFF))

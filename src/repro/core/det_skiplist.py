@@ -1,0 +1,355 @@
+"""Concurrent deterministic 1-2-3-4 skiplist (paper §II) — TPU-native encoding.
+
+The paper's structure: a terminal sorted linked list of (key, data) nodes plus
+log n index levels; every non-terminal node covers 2..4 children ("1-2-3-4"
+criterion), node key = max of its children's keys, sentinel tail/bottom nodes,
+mark bits for lazy deletion, lock-free Find, and proactive top-down
+rebalancing whose total work is linear in the number of operations (the
+(a,b)-tree analysis, eqs. 2-4: rebalancing work at height h decays
+geometrically).
+
+TPU adaptation (DESIGN.md §4): pointers -> level-major sorted arrays.
+
+  level 0 (terminal):  keys[C], vals[C], mark[C]  — sorted, KEY_INF padding
+  level l>=1:          keys_l[C_l] (max-of-group), child_l[C_l] (group start)
+
+* Lock-free Find -> a pure fixed-trip-count walk: exactly L levels, one
+  4-wide gather per level (guaranteed arity <= 4 — THIS is why the
+  deterministic variant is SIMD-friendly; the randomized skiplist needs
+  worst-case probe padding, see rand_skiplist.py).
+* Threads -> batch lanes. A batch of K ops linearizes by (key, lane) sort with
+  first-lane-wins tie-break: a deterministic linearization, strictly stronger
+  than the paper's "some linearization exists".
+* Top-down rebalancing -> deterministic level rebuild, grouping threes
+  (boundaries b_j = min(3j, n-2)) so every group has arity in {2,3} — always
+  1-2-3-4-legal. Rebuild cost at level l is n/3^l: the same geometric decay
+  the paper proves for per-op rebalancing, amortized over the batch.
+* Lazy deletion -> tombstone marks; non-terminal nodes keep routing through
+  marked keys (the paper's lazy non-terminal removal + CheckNodeKey) until a
+  compaction at 25% tombstones rebuilds all levels.
+* Sentinels -> KEY_INF padding rows with clamped gathers (self-pointing
+  sentinels = never out of bounds).
+
+All ops are jit-able; state is a pytree (checkpointable for free).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import KEY_INF, dup_in_run
+
+FANOUT = 4  # 1-2-3-4: arity in [2, 4]
+
+
+class DetSkiplist(NamedTuple):
+    term_keys: jnp.ndarray            # [C] uint64 sorted (marked entries stay)
+    term_vals: jnp.ndarray            # [C] uint64
+    term_mark: jnp.ndarray            # [C] bool tombstones
+    n_term: jnp.ndarray               # scalar int32 — physical entries
+    n_marked: jnp.ndarray             # scalar int32
+    level_keys: tuple                 # L arrays [C_l] uint64 (max of group)
+    level_child: tuple                # L arrays [C_l] int32  (group start)
+    level_count: jnp.ndarray          # [L] int32
+
+    @property
+    def capacity(self) -> int:
+        return self.term_keys.shape[0]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_keys)
+
+    def size(self) -> jnp.ndarray:
+        return self.n_term - self.n_marked
+
+
+def _level_caps(capacity: int) -> list[int]:
+    """Index-level capacities: groups are >=2 wide so counts at least halve."""
+    caps, c = [], capacity
+    while c > FANOUT:
+        c = (c + 1) // 2
+        caps.append(max(c, FANOUT))
+    return caps or [FANOUT]
+
+
+def skiplist_init(capacity: int) -> DetSkiplist:
+    caps = _level_caps(capacity)
+    return DetSkiplist(
+        term_keys=jnp.full((capacity,), KEY_INF),
+        term_vals=jnp.zeros((capacity,), jnp.uint64),
+        term_mark=jnp.zeros((capacity,), bool),
+        n_term=jnp.int32(0),
+        n_marked=jnp.int32(0),
+        level_keys=tuple(jnp.full((c,), KEY_INF) for c in caps),
+        level_child=tuple(jnp.zeros((c,), jnp.int32) for c in caps),
+        level_count=jnp.zeros((len(caps),), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# rebuild (the batched top-down rebalance)
+# ---------------------------------------------------------------------------
+
+def _group(n_prev: jnp.ndarray, cap_l: int, prev_keys: jnp.ndarray):
+    """Deterministic 1-2-3-4 grouping of a sorted level of n_prev keys.
+
+    boundaries b_j = min(3j, max(n_prev-2, 0)), b_g = n_prev with
+    g = (n_prev+2)//3 -> every group arity in {2,3} (single group of 1 only
+    when n_prev == 1 — the root edge case, same as the paper's head node).
+    """
+    j = jnp.arange(cap_l, dtype=jnp.int32)
+    g = jnp.where(n_prev > 0, (n_prev + 2) // 3, 0)
+    lo = jnp.minimum(3 * j, jnp.maximum(n_prev - 2, 0))
+    hi = jnp.where(j + 1 < g, jnp.minimum(3 * (j + 1), jnp.maximum(n_prev - 2, 0)), n_prev)
+    live = j < g
+    kidx = jnp.clip(hi - 1, 0, prev_keys.shape[0] - 1)
+    keys = jnp.where(live, prev_keys[kidx], KEY_INF)   # node key = max of group
+    child = jnp.where(live, lo, 0)
+    return keys, child, g
+
+
+def _rebuild_levels(s: DetSkiplist) -> DetSkiplist:
+    """Rebuild every index level from the terminal array (work n/3^l at level
+    l — the geometric decay of eqs. 2-4, amortized over the batch)."""
+    lkeys, lchild, counts = [], [], []
+    prev_keys, n_prev = s.term_keys, s.n_term
+    for l in range(s.num_levels):
+        cap_l = s.level_keys[l].shape[0]
+        keys, child, g = _group(n_prev, cap_l, prev_keys)
+        lkeys.append(keys)
+        lchild.append(child)
+        counts.append(g)
+        prev_keys, n_prev = keys, g
+    return s._replace(level_keys=tuple(lkeys), level_child=tuple(lchild),
+                      level_count=jnp.stack(counts).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Find (lock-free walk -> pure fixed-trip-count walk)
+# ---------------------------------------------------------------------------
+
+def find_batch(s: DetSkiplist, queries: jnp.ndarray):
+    """Batched Find. Returns (found[Q] bool, vals[Q], term_idx[Q] int32).
+
+    Exactly L descent steps; each step gathers <= FANOUT child keys (guaranteed
+    by the 1-2-3-4 criterion) and picks the first child with q <= child_key —
+    which exists inside the group because node key = max of group, and
+    first-true never escapes the group because the next group's keys are
+    larger (sorted order = the self-pointing sentinel).
+    """
+    Q = queries.shape[0]
+    top = s.num_levels - 1
+    # top level holds <= FANOUT live nodes: one static probe
+    topk = s.level_keys[top][:FANOUT]
+    ge = queries[:, None] <= topk[None, :]
+    i = jnp.argmax(ge, axis=1).astype(jnp.int32)          # first j with q <= key
+    for l in range(top, -1, -1):
+        child = s.level_child[l]
+        start = child[jnp.clip(i, 0, child.shape[0] - 1)]
+        below = s.term_keys if l == 0 else s.level_keys[l - 1]
+        idx = jnp.clip(start[:, None] + jnp.arange(FANOUT, dtype=jnp.int32)[None, :],
+                       0, below.shape[0] - 1)
+        ck = below[idx]                                    # [Q, FANOUT]
+        sel = jnp.argmax(queries[:, None] <= ck, axis=1).astype(jnp.int32)
+        i = start + sel
+    i = jnp.clip(i, 0, s.capacity - 1)
+    found = (s.term_keys[i] == queries) & ~s.term_mark[i] & (queries != KEY_INF)
+    return found, jnp.where(found, s.term_vals[i], jnp.uint64(0)), i
+
+
+def contains(s: DetSkiplist, key) -> jnp.ndarray:
+    return find_batch(s, jnp.asarray([key], jnp.uint64))[0][0]
+
+
+# ---------------------------------------------------------------------------
+# Addition (bulk, deterministic linearization)
+# ---------------------------------------------------------------------------
+
+def insert_batch(s: DetSkiplist, keys: jnp.ndarray, vals: jnp.ndarray,
+                 mask: jnp.ndarray | None = None):
+    """Batched Addition. Returns (s', inserted[K] bool, existed[K] bool).
+
+    Linearization: lanes sort by (key, lane) — stable argsort — duplicates
+    within the batch resolve to the lowest lane (first-writer-wins, a fixed
+    rule). Duplicate-vs-stored keys return existed (the paper's duplicate
+    check); keys matching a *marked* entry revive it in place (lazy-deletion
+    composition). Capacity overflow drops the highest-ranked lanes and
+    reports inserted=False (the paper's allocation-failure path).
+    """
+    K = keys.shape[0]
+    C = s.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    sv = vals[order]
+    sm = mask[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    dup = dup_in_run(same, sm)
+
+    pos = jnp.searchsorted(s.term_keys, sk).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, C - 1)
+    match = sm & (pos < C) & (s.term_keys[posc] == sk)
+    revive = match & s.term_mark[posc] & ~dup
+    exists = match & ~s.term_mark[posc]
+
+    # revive in place (first lane among in-batch dups wins — dup already false)
+    rpos = jnp.where(revive, posc, C)
+    term_mark = s.term_mark.at[rpos].set(False, mode="drop")
+    term_vals = s.term_vals.at[rpos].set(sv, mode="drop")
+    n_marked = s.n_marked - jnp.sum(revive).astype(jnp.int32)
+
+    new = sm & ~match & ~dup
+    rank = jnp.cumsum(new.astype(jnp.int32)) - 1
+    new = new & (s.n_term + rank < C)                      # overflow -> fail lanes
+    n_new = jnp.sum(new).astype(jnp.int32)
+
+    # compact the new keys into a sorted [K] buffer (pad KEY_INF)
+    crank = jnp.where(new, rank, K)
+    newk = jnp.full((K,), KEY_INF).at[crank].set(sk, mode="drop")
+    newv = jnp.zeros((K,), jnp.uint64).at[crank].set(sv, mode="drop")
+
+    # two-way sorted merge by destination scatter
+    old_idx = jnp.arange(C, dtype=jnp.int32)
+    dest_old = old_idx + jnp.searchsorted(newk, s.term_keys, side="left").astype(jnp.int32)
+    dest_old = jnp.where(old_idx < s.n_term, dest_old, C)
+    dest_new = (jnp.searchsorted(s.term_keys, newk, side="left").astype(jnp.int32)
+                + jnp.arange(K, dtype=jnp.int32))
+    dest_new = jnp.where(jnp.arange(K) < n_new, dest_new, C)
+
+    tk = jnp.full((C,), KEY_INF).at[dest_old].set(s.term_keys, mode="drop")
+    tk = tk.at[dest_new].set(newk, mode="drop")
+    tv = jnp.zeros((C,), jnp.uint64).at[dest_old].set(term_vals, mode="drop")
+    tv = tv.at[dest_new].set(newv, mode="drop")
+    tm = jnp.zeros((C,), bool).at[dest_old].set(term_mark, mode="drop")
+    # new entries unmarked (already False)
+
+    s2 = s._replace(term_keys=tk, term_vals=tv, term_mark=tm,
+                    n_term=s.n_term + n_new, n_marked=n_marked)
+    s2 = _rebuild_levels(s2)
+
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    inserted = (new | revive)[inv]
+    existed = (exists | dup)[inv]
+    return s2, inserted, existed
+
+
+# ---------------------------------------------------------------------------
+# Deletion (lazy marks + threshold compaction)
+# ---------------------------------------------------------------------------
+
+def delete_batch(s: DetSkiplist, keys: jnp.ndarray,
+                 mask: jnp.ndarray | None = None, compact_num: int = 1,
+                 compact_den: int = 4):
+    """Batched Deletion: tombstone the terminal nodes (DropKey), leave the
+    index levels stale (the paper's lazy non-terminal removal). Compaction
+    (merge/borrow analogue, performed wholesale) triggers when tombstones
+    exceed compact_num/compact_den of entries. Returns (s', deleted[K])."""
+    K = keys.shape[0]
+    C = s.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    sm = mask[order] & (sk != KEY_INF)
+    same = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    dup = dup_in_run(same, sm)
+
+    pos = jnp.searchsorted(s.term_keys, sk).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, C - 1)
+    hit = sm & ~dup & (pos < C) & (s.term_keys[posc] == sk) & ~s.term_mark[posc]
+
+    mark = s.term_mark.at[jnp.where(hit, posc, C)].set(True, mode="drop")
+    n_marked = s.n_marked + jnp.sum(hit).astype(jnp.int32)
+    s2 = s._replace(term_mark=mark, n_marked=n_marked)
+
+    s2 = jax.lax.cond(n_marked * compact_den > s2.n_term * compact_num,
+                      compact, lambda t: t, s2)
+
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return s2, hit[inv]
+
+
+def compact(s: DetSkiplist) -> DetSkiplist:
+    """Physically remove tombstones and rebuild all levels (the wholesale
+    merge/borrow + DecreaseDepth: stale index nodes vanish here)."""
+    C = s.capacity
+    keep = (~s.term_mark) & (jnp.arange(C) < s.n_term)
+    dest = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32)) - 1, C)
+    tk = jnp.full((C,), KEY_INF).at[dest].set(s.term_keys, mode="drop")
+    tv = jnp.zeros((C,), jnp.uint64).at[dest].set(s.term_vals, mode="drop")
+    n = jnp.sum(keep).astype(jnp.int32)
+    # derive cleared fields from inputs (keeps shard_map varying-axis types
+    # identical across lax.cond branches)
+    s2 = s._replace(term_keys=tk, term_vals=tv,
+                    term_mark=s.term_mark & False, n_term=n,
+                    n_marked=s.n_marked * 0)
+    return _rebuild_levels(s2)
+
+
+# ---------------------------------------------------------------------------
+# Range search (the skiplist's raison d'être vs hash tables)
+# ---------------------------------------------------------------------------
+
+def range_query(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
+    """Keys in [lo, hi), batched over Q query rows.
+
+    Returns (count[Q], keys[Q, max_out], vals[Q, max_out], valid[Q, max_out]).
+    Terminal contiguity makes this a gather — the paper's argument for
+    skiplists over BSTs (follow the linked list vs depth-first traversal).
+    """
+    i_lo = jnp.searchsorted(s.term_keys, lo, side="left").astype(jnp.int32)
+    i_hi = jnp.searchsorted(s.term_keys, hi, side="left").astype(jnp.int32)
+    idx = jnp.clip(i_lo[:, None] + jnp.arange(max_out, dtype=jnp.int32)[None, :],
+                   0, s.capacity - 1)
+    in_range = (i_lo[:, None] + jnp.arange(max_out)[None, :]) < i_hi[:, None]
+    valid = in_range & ~s.term_mark[idx]
+    # exact count (including beyond max_out): prefix-sum of live entries
+    live = (~s.term_mark) & (s.term_keys != KEY_INF)
+    cs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(live.astype(jnp.int32))])
+    count = cs[i_hi] - cs[i_lo]
+    return count, s.term_keys[idx], s.term_vals[idx], valid
+
+
+# ---------------------------------------------------------------------------
+# invariant checker (tests + the paper's 1-2-3-4 criterion)
+# ---------------------------------------------------------------------------
+
+def check_invariants(s: DetSkiplist) -> dict:
+    """Host-side structural validation. Returns dict of violation counts."""
+    import numpy as np
+
+    out = {}
+    tk = np.asarray(s.term_keys)
+    n = int(s.n_term)
+    out["terminal_sorted"] = int(np.sum(np.diff(tk[:n].astype(np.float64)) < 0)) if n > 1 else 0
+    out["padding_inf"] = int(np.sum(tk[n:] != np.uint64(0xFFFFFFFFFFFFFFFF)))
+    prev_keys, n_prev = tk, n
+    bad_arity = bad_maxkey = bad_subset = 0
+    counts = np.asarray(s.level_count)
+    for l in range(s.num_levels):
+        lk = np.asarray(s.level_keys[l])
+        lc = np.asarray(s.level_child[l])
+        g = int(counts[l])
+        for j in range(g):
+            lo = int(lc[j])
+            hi = int(lc[j + 1]) if j + 1 < g else n_prev
+            arity = hi - lo
+            if not (1 <= arity <= FANOUT) or (arity == 1 and n_prev != 1):
+                bad_arity += 1
+            if hi >= 1 and lk[j] != prev_keys[hi - 1]:
+                bad_maxkey += 1
+            if lk[j] not in prev_keys[:n_prev]:
+                bad_subset += 1
+        prev_keys, n_prev = lk, g
+    out["bad_arity"] = bad_arity
+    out["bad_maxkey"] = bad_maxkey
+    out["bad_subset"] = bad_subset
+    return out

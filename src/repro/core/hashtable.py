@@ -1,0 +1,290 @@
+"""MWMR hash tables (paper §VII): fixed-slot and two-level implementations.
+
+Paper version 1: fixed number of slots, a binary tree per slot for collisions.
+Paper version 2: two-level tables — RW locks shared at L1, a second-level
+table per slot expanded past a collision threshold, a memory manager per
+first-level slot.
+
+TPU adaptation: a per-slot search tree makes no sense at bucket sizes that fit
+one vector register row — a bucket is a contiguous [B]-wide row compared in a
+single vector op (the "constant cost per key" the paper wants, with perfect
+spatial locality: one bucket = one VMEM tile row). The RW-lock concurrency
+becomes batched updates with deterministic linearization: lanes sort
+lexicographically by (slot, key) (two stable argsorts), in-batch duplicates
+resolve to the lowest lane, and within-slot ranks come from a segmented
+cumsum — the fetch-add analogue, assigning distinct bucket columns.
+
+Two-level: every L1 slot has an inline bucket; overflow expands into an L2
+table block allocated from a BlockPool (the paper's per-slot memory manager),
+hashed by the *next* log2(M2) bits — exactly the paper's bit-slicing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import EMPTY, dup_in_run, hash64
+from repro.core.blockpool import BlockPool, blockpool_init, pool_alloc
+
+
+def _lex_sort_slots_keys(slots: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Stable lexicographic argsort by (slot, key): sort by key, then stable
+    sort by slot."""
+    o1 = jnp.argsort(keys, stable=True)
+    o2 = jnp.argsort(slots[o1], stable=True)
+    return o1[o2]
+
+
+def _batch_plan(slots: jnp.ndarray, keys: jnp.ndarray, mask: jnp.ndarray):
+    """Shared linearization plan: returns (order, sorted slots/keys/mask,
+    in-batch-dup mask, within-slot insert rank, inverse permutation)."""
+    K = keys.shape[0]
+    order = _lex_sort_slots_keys(slots, keys)
+    ss, sk, sm = slots[order], keys[order], mask[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool),
+                            (sk[1:] == sk[:-1]) & (ss[1:] == ss[:-1])])
+    dup = dup_in_run(same, sm)
+    # segmented rank among insert-candidate lanes of the same slot
+    run_start = jnp.searchsorted(ss, ss, side="left").astype(jnp.int32)
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return order, ss, sk, sm, dup, run_start, inv
+
+
+def _seg_rank(cand: jnp.ndarray, run_start: jnp.ndarray) -> jnp.ndarray:
+    c = jnp.cumsum(cand.astype(jnp.int32))
+    before = jnp.where(run_start > 0, c[jnp.maximum(run_start - 1, 0)], 0)
+    before = jnp.where(run_start > 0, before, 0)
+    return c - before - cand.astype(jnp.int32)   # 0-based rank within slot run
+
+
+def _nth_empty(rows_keys: jnp.ndarray, rank: jnp.ndarray):
+    """Column of the (rank+1)-th EMPTY cell in each [B] row; B on overflow."""
+    B = rows_keys.shape[1]
+    empty = rows_keys == EMPTY
+    cum = jnp.cumsum(empty.astype(jnp.int32), axis=1)
+    want = rank[:, None] + 1
+    hit = empty & (cum == want)
+    col = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    ok = jnp.any(hit, axis=1)
+    return jnp.where(ok, col, B), ok
+
+
+# ---------------------------------------------------------------------------
+# Version 1: fixed slots, vector-row buckets
+# ---------------------------------------------------------------------------
+
+class FixedHash(NamedTuple):
+    keys: jnp.ndarray   # [M, B] uint64, EMPTY pad
+    vals: jnp.ndarray   # [M, B] uint64
+    count: jnp.ndarray  # scalar int64 live entries
+
+    @property
+    def num_slots(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def bucket(self) -> int:
+        return self.keys.shape[1]
+
+
+def fixed_init(num_slots: int, bucket: int) -> FixedHash:
+    assert num_slots & (num_slots - 1) == 0, "power-of-two slots (paper §VIII)"
+    return FixedHash(keys=jnp.full((num_slots, bucket), EMPTY),
+                     vals=jnp.zeros((num_slots, bucket), jnp.uint64),
+                     count=jnp.int64(0))
+
+
+def _slot_of(h: FixedHash, keys: jnp.ndarray) -> jnp.ndarray:
+    # s = H(k) mod M; M power of two -> low log(M) bits of the scrambled hash
+    return (hash64(keys) & jnp.uint64(h.num_slots - 1)).astype(jnp.int32)
+
+
+def fixed_insert(h: FixedHash, keys: jnp.ndarray, vals: jnp.ndarray,
+                 mask: jnp.ndarray | None = None):
+    """Returns (h', inserted[K], existed[K]). Bucket-full lanes fail (the
+    bounded-collision threshold; the two-level table is the remedy)."""
+    K = keys.shape[0]
+    M, B = h.num_slots, h.bucket
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != EMPTY)
+    slots = _slot_of(h, keys)
+    order, ss, sk, sm, dup, run_start, inv = _batch_plan(slots, keys, mask)
+
+    rows = h.keys[ss]                                  # [K, B] pre-batch state
+    exists = sm & jnp.any(rows == sk[:, None], axis=1) & ~dup
+    cand = sm & ~dup & ~exists
+    rank = _seg_rank(cand, run_start)
+    col, fit = _nth_empty(rows, rank)
+    ins = cand & fit
+
+    flat = jnp.where(ins, ss * B + col, M * B)
+    sv = vals[order]
+    nk = h.keys.reshape(-1).at[flat].set(sk, mode="drop").reshape(M, B)
+    nv = h.vals.reshape(-1).at[flat].set(sv, mode="drop").reshape(M, B)
+    h2 = FixedHash(keys=nk, vals=nv, count=h.count + jnp.sum(ins).astype(jnp.int64))
+    return h2, ins[inv], (exists | dup)[inv]
+
+
+def fixed_find(h: FixedHash, keys: jnp.ndarray):
+    slots = _slot_of(h, keys)
+    rows = h.keys[slots]
+    hit = rows == keys[:, None]
+    found = jnp.any(hit, axis=1) & (keys != EMPTY)
+    col = jnp.argmax(hit, axis=1)
+    vals = jnp.where(found, h.vals[slots, col], jnp.uint64(0))
+    return found, vals
+
+
+def fixed_delete(h: FixedHash, keys: jnp.ndarray, mask: jnp.ndarray | None = None):
+    K = keys.shape[0]
+    M, B = h.num_slots, h.bucket
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    slots = _slot_of(h, keys)
+    rows = h.keys[slots]
+    hit = rows == keys[:, None]
+    found = jnp.any(hit, axis=1) & mask & (keys != EMPTY)
+    col = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    # in-batch duplicate deletes target the same cell: scatter of EMPTY is
+    # idempotent, count via unique cells -> dedupe by (slot,col)
+    cell = slots * B + col
+    o = jnp.argsort(cell, stable=True)
+    cs = cell[o]
+    fdup = jnp.concatenate([jnp.zeros((1,), bool), cs[1:] == cs[:-1]]) & found[o]
+    inv = jnp.zeros((K,), jnp.int32).at[o].set(jnp.arange(K, dtype=jnp.int32))
+    eff = found & ~fdup[inv]
+    flat = jnp.where(eff, cell, M * B)
+    nk = h.keys.reshape(-1).at[flat].set(EMPTY, mode="drop").reshape(M, B)
+    h2 = FixedHash(keys=nk, vals=h.vals, count=h.count - jnp.sum(eff).astype(jnp.int64))
+    return h2, eff
+
+
+# ---------------------------------------------------------------------------
+# Version 2: two-level (inline L1 bucket + pooled L2 tables)
+# ---------------------------------------------------------------------------
+
+class TwoLevelHash(NamedTuple):
+    l1_keys: jnp.ndarray   # [M1, B1]
+    l1_vals: jnp.ndarray   # [M1, B1]
+    l2_block: jnp.ndarray  # [M1] int32 block id, -1 = not expanded
+    l2_keys: jnp.ndarray   # [P, M2, B2] pooled second-level tables
+    l2_vals: jnp.ndarray   # [P, M2, B2]
+    pool: BlockPool        # allocator over P blocks (memory manager per slot)
+    count: jnp.ndarray
+
+    @property
+    def m1(self) -> int:
+        return self.l1_keys.shape[0]
+
+    @property
+    def m2(self) -> int:
+        return self.l2_keys.shape[1]
+
+
+def twolevel_init(m1: int, b1: int, m2: int, b2: int, pool_blocks: int) -> TwoLevelHash:
+    assert m1 & (m1 - 1) == 0 and m2 & (m2 - 1) == 0
+    return TwoLevelHash(
+        l1_keys=jnp.full((m1, b1), EMPTY),
+        l1_vals=jnp.zeros((m1, b1), jnp.uint64),
+        l2_block=jnp.full((m1,), -1, jnp.int32),
+        l2_keys=jnp.full((pool_blocks, m2, b2), EMPTY),
+        l2_vals=jnp.zeros((pool_blocks, m2, b2), jnp.uint64),
+        pool=blockpool_init(pool_blocks),
+        count=jnp.int64(0),
+    )
+
+
+def _slots12(h: TwoLevelHash, keys: jnp.ndarray):
+    # lower log(M1) bits for L1, the NEXT log(M2) bits for L2 (paper §VIII)
+    hv = hash64(keys)
+    s1 = (hv & jnp.uint64(h.m1 - 1)).astype(jnp.int32)
+    s2 = ((hv >> jnp.uint64(h.m1.bit_length() - 1)) & jnp.uint64(h.m2 - 1)).astype(jnp.int32)
+    return s1, s2
+
+
+def twolevel_find(h: TwoLevelHash, keys: jnp.ndarray):
+    s1, s2 = _slots12(h, keys)
+    rows1 = h.l1_keys[s1]
+    hit1 = rows1 == keys[:, None]
+    f1 = jnp.any(hit1, axis=1)
+    v1 = h.l1_vals[s1, jnp.argmax(hit1, axis=1)]
+    blk = h.l2_block[s1]
+    safe = jnp.maximum(blk, 0)
+    rows2 = h.l2_keys[safe, s2]
+    hit2 = (rows2 == keys[:, None]) & (blk >= 0)[:, None]
+    f2 = jnp.any(hit2, axis=1)
+    v2 = h.l2_vals[safe, s2, jnp.argmax(hit2, axis=1)]
+    found = (f1 | f2) & (keys != EMPTY)
+    return found, jnp.where(f1, v1, jnp.where(f2, v2, jnp.uint64(0)))
+
+
+def twolevel_insert(h: TwoLevelHash, keys: jnp.ndarray, vals: jnp.ndarray,
+                    mask: jnp.ndarray | None = None):
+    """L1 inline bucket first; on overflow expand the slot with a pooled L2
+    table (the paper's threshold-triggered expansion) and place there."""
+    K = keys.shape[0]
+    M1, B1 = h.l1_keys.shape
+    P, M2, B2 = h.l2_keys.shape
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != EMPTY)
+    s1, s2 = _slots12(h, keys)
+    order, ss, sk, sm, dup, run_start, inv = _batch_plan(s1, keys, mask)
+    sv = vals[order]
+    ss2 = s2[order]
+
+    # existence check across both levels (pre-batch state)
+    rows1 = h.l1_keys[ss]
+    blk0 = h.l2_block[ss]
+    rows2 = h.l2_keys[jnp.maximum(blk0, 0), ss2]
+    exists = sm & ~dup & (jnp.any(rows1 == sk[:, None], axis=1)
+                          | (jnp.any(rows2 == sk[:, None], axis=1) & (blk0 >= 0)))
+    cand = sm & ~dup & ~exists
+
+    # L1 placement by within-slot rank over remaining empties
+    rank1 = _seg_rank(cand, run_start)
+    col1, fit1 = _nth_empty(rows1, rank1)
+    put1 = cand & fit1
+
+    # overflow lanes go to L2; slots without an L2 table get one (first
+    # overflow lane of each slot run performs the allocation)
+    over = cand & ~fit1
+    need_alloc = over & (blk0 < 0)
+    first_of_run = jnp.arange(K, dtype=jnp.int32) == run_start
+    # the first *needing* lane in the run allocates: rank among needing == 0
+    alloc_rank = _seg_rank(need_alloc, run_start)
+    do_alloc = need_alloc & (alloc_rank == 0)
+    pool2, ids, _handles, got = pool_alloc(h.pool, do_alloc)
+    l2_block = h.l2_block.at[jnp.where(do_alloc & got, ss, M1)].set(ids, mode="drop")
+
+    blk = l2_block[ss]                                  # post-allocation view
+    has_l2 = over & (blk >= 0)
+    # within (slot) rank among L2-bound lanes, placed at s2 buckets; lanes in
+    # the same (s1, s2) pair need distinct columns -> rank over that pair
+    pair = ss.astype(jnp.int64) * M2 + ss2.astype(jnp.int64)
+    po = jnp.argsort(pair, stable=True)
+    ppair = pair[po]
+    prun = jnp.searchsorted(ppair, ppair, side="left").astype(jnp.int32)
+    pcand = has_l2[po]
+    prank = _seg_rank(pcand, prun)
+    rank2 = jnp.zeros((K,), jnp.int32).at[po].set(prank)
+    rows2b = h.l2_keys[jnp.maximum(blk, 0), ss2]
+    col2, fit2 = _nth_empty(rows2b, rank2)
+    put2 = has_l2 & fit2
+
+    # scatters
+    flat1 = jnp.where(put1, ss * B1 + col1, M1 * B1)
+    nk1 = h.l1_keys.reshape(-1).at[flat1].set(sk, mode="drop").reshape(M1, B1)
+    nv1 = h.l1_vals.reshape(-1).at[flat1].set(sv, mode="drop").reshape(M1, B1)
+    flat2 = jnp.where(put2, (blk * M2 + ss2) * B2 + col2, P * M2 * B2)
+    nk2 = h.l2_keys.reshape(-1).at[flat2].set(sk, mode="drop").reshape(P, M2, B2)
+    nv2 = h.l2_vals.reshape(-1).at[flat2].set(sv, mode="drop").reshape(P, M2, B2)
+
+    ins = put1 | put2
+    h2 = TwoLevelHash(l1_keys=nk1, l1_vals=nv1, l2_block=l2_block,
+                      l2_keys=nk2, l2_vals=nv2, pool=pool2,
+                      count=h.count + jnp.sum(ins).astype(jnp.int64))
+    return h2, ins[inv], (exists | dup)[inv]

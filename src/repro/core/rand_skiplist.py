@@ -1,0 +1,236 @@
+"""Lock-free randomized skiplist (paper §VI / Pugh) — array-encoded comparator.
+
+The paper implements Pugh's randomized skiplist (lock-free, with the same
+memory manager) and finds it BEATS the deterministic 1-2-3-4 tree on CPU
+(tables IV / fig 6): no rebalancing work, no L-shaped lock contention.
+
+On a SIMD machine the trade inverts, and this module exists to measure that
+(benchmarks/table4_det_vs_rand.py): node heights are geometric(1/4), so level
+intervals have *random* width — a batched descent must pad every lane's probe
+to the worst-case gap, wasting lanes, while the deterministic skiplist probes
+exactly 4 wide. Heights come from splitmix64(key) (deterministic-by-hash:
+the functional analogue of the paper's RNG, and reproducible).
+
+TPU adaptation: unbounded w.h.p. gaps are incompatible with static shapes, so
+the builder force-promotes a key wherever a level gap would exceed MAX_GAP
+(probability ~ (3/4)^MAX_GAP per position — measured and reported by the
+bench). This cap is itself a mini-determinization and is called out in
+DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import KEY_INF, dup_in_run, geometric_height
+
+MAX_GAP = 16   # static probe width per level
+PROBE = 8      # gather chunk
+
+
+class RandSkiplist(NamedTuple):
+    term_keys: jnp.ndarray   # [C] sorted uint64, KEY_INF pad
+    term_vals: jnp.ndarray   # [C] uint64
+    term_mark: jnp.ndarray   # [C] bool
+    n_term: jnp.ndarray      # scalar int32
+    n_marked: jnp.ndarray
+    level_keys: tuple        # L x [C_l]
+    level_child: tuple       # L x [C_l] int32 — position in level below
+    level_count: jnp.ndarray # [L] int32
+    forced: jnp.ndarray      # scalar int32 — gap-cap promotions (telemetry)
+
+    @property
+    def capacity(self) -> int:
+        return self.term_keys.shape[0]
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_keys)
+
+    def size(self):
+        return self.n_term - self.n_marked
+
+
+def _level_caps(capacity: int) -> list[int]:
+    caps, c = [], capacity
+    while c > MAX_GAP:
+        c = (c + 1) // 2   # gap >= 2 enforced below, so counts at least halve
+        caps.append(max(c, MAX_GAP))
+    return caps or [MAX_GAP]
+
+
+def rand_skiplist_init(capacity: int) -> RandSkiplist:
+    caps = _level_caps(capacity)
+    return RandSkiplist(
+        term_keys=jnp.full((capacity,), KEY_INF),
+        term_vals=jnp.zeros((capacity,), jnp.uint64),
+        term_mark=jnp.zeros((capacity,), bool),
+        n_term=jnp.int32(0),
+        n_marked=jnp.int32(0),
+        level_keys=tuple(jnp.full((c,), KEY_INF) for c in caps),
+        level_child=tuple(jnp.zeros((c,), jnp.int32) for c in caps),
+        level_count=jnp.zeros((len(caps),), jnp.int32),
+        forced=jnp.int32(0),
+    )
+
+
+def _promote(keys: jnp.ndarray, n: jnp.ndarray, want_level: int):
+    """Membership mask for the next level: hash-height >= level, with gaps
+    capped at MAX_GAP by forced promotion (see module docstring)."""
+    C = keys.shape[0]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    live = idx < n
+    want = live & (geometric_height(keys, want_level) >= want_level)
+    # cap gaps: promote idx where distance to previous promoted >= MAX_GAP
+    last = jax.lax.associative_scan(jnp.maximum, jnp.where(want, idx, -1))
+    force = live & ~want & ((idx - last) % MAX_GAP == 0) & (last < idx)
+    forced_n = jnp.sum(force).astype(jnp.int32)
+    # always promote position 0 of a non-empty level so the top has an anchor
+    head = live & (idx == 0)
+    return want | force | head, forced_n
+
+
+def _rebuild(s: RandSkiplist) -> RandSkiplist:
+    lkeys, lchild, counts = [], [], []
+    prev_keys, n_prev = s.term_keys, s.n_term
+    forced_total = jnp.int32(0)
+    for l in range(s.num_levels):
+        cap_l = s.level_keys[l].shape[0]
+        memb, fn = _promote(prev_keys, n_prev, l + 1)
+        forced_total = forced_total + fn
+        rank = jnp.cumsum(memb.astype(jnp.int32)) - 1
+        g = jnp.sum(memb).astype(jnp.int32)
+        dest = jnp.where(memb, jnp.minimum(rank, cap_l - 1), cap_l)
+        keys = jnp.full((cap_l,), KEY_INF).at[dest].set(prev_keys, mode="drop")
+        src = jnp.arange(prev_keys.shape[0], dtype=jnp.int32)
+        child = jnp.zeros((cap_l,), jnp.int32).at[dest].set(src, mode="drop")
+        g = jnp.minimum(g, cap_l)
+        lkeys.append(keys)
+        lchild.append(child)
+        counts.append(g)
+        prev_keys, n_prev = keys, g
+    return s._replace(level_keys=tuple(lkeys), level_child=tuple(lchild),
+                      level_count=jnp.stack(counts).astype(jnp.int32),
+                      forced=forced_total)
+
+
+def find_batch(s: RandSkiplist, queries: jnp.ndarray):
+    """Batched lock-free Find: descend levels, scanning right in PROBE-wide
+    chunks up to MAX_GAP (random interval widths — the padded cost)."""
+    top = s.num_levels - 1
+    i = jnp.zeros(queries.shape, jnp.int32)   # anchor at leftmost top node
+    for l in range(top, -1, -1):
+        keys_l = s.level_keys[l]
+        cap = keys_l.shape[0]
+        # walk right within this level: first j >= i with q <= keys_l[j]
+        best = jnp.full(queries.shape, -1, jnp.int32)
+        for c in range(MAX_GAP // PROBE):
+            idx = jnp.clip(i[:, None] + c * PROBE
+                           + jnp.arange(PROBE, dtype=jnp.int32)[None, :], 0, cap - 1)
+            ck = keys_l[idx]
+            hit = queries[:, None] <= ck
+            off = jnp.argmax(hit, axis=1).astype(jnp.int32)
+            found_here = jnp.any(hit, axis=1)
+            cand = i + c * PROBE + off
+            best = jnp.where((best < 0) & found_here, cand, best)
+        j = jnp.where(best >= 0, best, jnp.minimum(i + MAX_GAP - 1, cap - 1))
+        below_start = s.level_child[l][jnp.clip(j, 0, cap - 1)]
+        prev_j = jnp.maximum(j - 1, 0)
+        # descend from the *previous* node's child (strictly-less anchor) so we
+        # do not skip keys between prev and j at the level below
+        anchor = jnp.where(j > 0, s.level_child[l][prev_j], 0)
+        i = anchor
+    # terminal scan
+    tk = s.term_keys
+    best = jnp.full(queries.shape, -1, jnp.int32)
+    for c in range(MAX_GAP // PROBE * 2):
+        idx = jnp.clip(i[:, None] + c * PROBE
+                       + jnp.arange(PROBE, dtype=jnp.int32)[None, :], 0, s.capacity - 1)
+        ck = tk[idx]
+        hit = queries[:, None] <= ck
+        off = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        cand = i + c * PROBE + off
+        best = jnp.where((best < 0) & jnp.any(hit, axis=1), cand, best)
+    ti = jnp.clip(jnp.where(best >= 0, best, 0), 0, s.capacity - 1)
+    found = (tk[ti] == queries) & ~s.term_mark[ti] & (queries != KEY_INF)
+    return found, jnp.where(found, s.term_vals[ti], jnp.uint64(0)), ti
+
+
+def insert_batch(s: RandSkiplist, keys: jnp.ndarray, vals: jnp.ndarray,
+                 mask: jnp.ndarray | None = None):
+    """Same bulk merge as the deterministic version; levels rebuilt from
+    hash-heights (no grouping work — the paper's 'no rebalancing' advantage,
+    which the batched build mostly erases: measured in table4 bench)."""
+    K = keys.shape[0]
+    C = s.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+
+    order = jnp.argsort(keys, stable=True)
+    sk, sv, sm = keys[order], vals[order], mask[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    dup = dup_in_run(same, sm)
+
+    pos = jnp.searchsorted(s.term_keys, sk).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, C - 1)
+    match = sm & (pos < C) & (s.term_keys[posc] == sk)
+    revive = match & s.term_mark[posc] & ~dup
+    exists = match & ~s.term_mark[posc]
+
+    rpos = jnp.where(revive, posc, C)
+    term_mark = s.term_mark.at[rpos].set(False, mode="drop")
+    term_vals = s.term_vals.at[rpos].set(sv, mode="drop")
+    n_marked = s.n_marked - jnp.sum(revive).astype(jnp.int32)
+
+    new = sm & ~match & ~dup
+    rank = jnp.cumsum(new.astype(jnp.int32)) - 1
+    new = new & (s.n_term + rank < C)
+    n_new = jnp.sum(new).astype(jnp.int32)
+
+    crank = jnp.where(new, rank, K)
+    newk = jnp.full((K,), KEY_INF).at[crank].set(sk, mode="drop")
+    newv = jnp.zeros((K,), jnp.uint64).at[crank].set(sv, mode="drop")
+
+    old_idx = jnp.arange(C, dtype=jnp.int32)
+    dest_old = old_idx + jnp.searchsorted(newk, s.term_keys, side="left").astype(jnp.int32)
+    dest_old = jnp.where(old_idx < s.n_term, dest_old, C)
+    dest_new = (jnp.searchsorted(s.term_keys, newk, side="left").astype(jnp.int32)
+                + jnp.arange(K, dtype=jnp.int32))
+    dest_new = jnp.where(jnp.arange(K) < n_new, dest_new, C)
+
+    tk = jnp.full((C,), KEY_INF).at[dest_old].set(s.term_keys, mode="drop")
+    tk = tk.at[dest_new].set(newk, mode="drop")
+    tv = jnp.zeros((C,), jnp.uint64).at[dest_old].set(term_vals, mode="drop")
+    tv = tv.at[dest_new].set(newv, mode="drop")
+    tm = jnp.zeros((C,), bool).at[dest_old].set(term_mark, mode="drop")
+
+    s2 = s._replace(term_keys=tk, term_vals=tv, term_mark=tm,
+                    n_term=s.n_term + n_new, n_marked=n_marked)
+    s2 = _rebuild(s2)
+
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return s2, (new | revive)[inv], (exists | dup)[inv]
+
+
+def delete_batch(s: RandSkiplist, keys: jnp.ndarray,
+                 mask: jnp.ndarray | None = None):
+    K = keys.shape[0]
+    C = s.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    sm = mask[order] & (sk != KEY_INF)
+    same = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    dup = dup_in_run(same, sm)
+    pos = jnp.searchsorted(s.term_keys, sk).astype(jnp.int32)
+    posc = jnp.clip(pos, 0, C - 1)
+    hit = sm & ~dup & (pos < C) & (s.term_keys[posc] == sk) & ~s.term_mark[posc]
+    mark = s.term_mark.at[jnp.where(hit, posc, C)].set(True, mode="drop")
+    s2 = s._replace(term_mark=mark,
+                    n_marked=s.n_marked + jnp.sum(hit).astype(jnp.int32))
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return s2, hit[inv]

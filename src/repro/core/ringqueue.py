@@ -1,0 +1,237 @@
+"""Unbounded lock-free queue, LCRQ-adapted (paper §III, algorithms 7-10).
+
+Faithful structure: a chain of fixed-size array blocks (`list` in the paper)
+with per-block `front`/`rear` monotone counters, full/empty flag arrays `fe`
+(0 empty, 1 full, 2 consumed), `wclosed`/`rclosed` completion flags, a `use[]`
+bitmap over a preallocated pool of blocks, `next` links, and block recycling
+with a per-block recycle counter (the ABA refcount).
+
+TPU adaptation (DESIGN.md §2): threads -> batch lanes. The paper's fetch-add
+(`atomicAdd(rear, 1)` per thread) becomes a cumsum over the lane mask — each
+lane receives a distinct slot, which is exactly the linearization the paper
+proves: front/rear updates are the linearization points; here the single
+functional state update is that point. The `fe` flags lose their signalling
+role (no racing readers) and become checked invariants: a pop only consumes
+fe==1 slots and a push only fills fe==0 slots; property tests assert the
+discipline, catching the same bugs the flags guard against on a CPU.
+
+A batched push of K lanes spans at most ceil(K/B)+1 blocks, so block discovery
+is a static unrolled walk — no data-dependent loops (TPU-friendly).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FE_EMPTY, FE_FULL, FE_CONSUMED = 0, 1, 2
+NO_BLK = jnp.int32(-1)
+
+
+class RingQueue(NamedTuple):
+    data: jnp.ndarray      # [M, B] payload
+    fe: jnp.ndarray        # [M, B] int8
+    front: jnp.ndarray     # [M] int32
+    rear: jnp.ndarray      # [M] int32
+    wclosed: jnp.ndarray   # [M] bool
+    rclosed: jnp.ndarray   # [M] bool
+    nxt: jnp.ndarray       # [M] int32, -1 = none
+    use: jnp.ndarray       # [M] bool
+    recycles: jnp.ndarray  # [M] uint32 — paper's per-node recycle refcount
+    head_blk: jnp.ndarray  # scalar int32 (listhead)
+    tail_blk: jnp.ndarray  # scalar int32 (cn)
+    pushed: jnp.ndarray    # scalar int64 monotone
+    popped: jnp.ndarray    # scalar int64 monotone
+
+    @property
+    def max_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_size(self) -> int:
+        return self.data.shape[1]
+
+
+def queue_init(max_blocks: int, block_size: int, dtype=jnp.uint64) -> RingQueue:
+    use = jnp.zeros((max_blocks,), bool).at[0].set(True)
+    return RingQueue(
+        data=jnp.zeros((max_blocks, block_size), dtype),
+        fe=jnp.zeros((max_blocks, block_size), jnp.int8),
+        front=jnp.zeros((max_blocks,), jnp.int32),
+        rear=jnp.zeros((max_blocks,), jnp.int32),
+        wclosed=jnp.zeros((max_blocks,), bool),
+        rclosed=jnp.zeros((max_blocks,), bool),
+        nxt=jnp.full((max_blocks,), NO_BLK),
+        use=use,
+        recycles=jnp.zeros((max_blocks,), jnp.uint32),
+        head_blk=jnp.int32(0),
+        tail_blk=jnp.int32(0),
+        pushed=jnp.int64(0),
+        popped=jnp.int64(0),
+    )
+
+
+def queue_size(q: RingQueue) -> jnp.ndarray:
+    return q.pushed - q.popped
+
+
+def _chain(q: RingQueue, start: jnp.ndarray, span: int):
+    """Unrolled walk of `span` chain blocks from `start`; -1 past the end."""
+    ids = []
+    cur = start
+    for _ in range(span):
+        ids.append(cur)
+        safe = jnp.maximum(cur, 0)
+        cur = jnp.where(cur >= 0, q.nxt[safe], NO_BLK)
+    return jnp.stack(ids)  # [span] int32
+
+
+def push_batch(q: RingQueue, vals: jnp.ndarray, mask: jnp.ndarray):
+    """Batched push (paper algs. 7+8). Returns (q', pushed_mask).
+
+    Lanes fail only if the block pool is exhausted (addNode's `return false`).
+    """
+    K_lanes = vals.shape[0]
+    B, M = q.block_size, q.max_blocks
+    span = math.ceil(K_lanes / B) + 1
+
+    mask = mask.astype(bool)
+    offs = jnp.cumsum(mask.astype(jnp.int32)) - 1          # fetch-add analogue
+    K = jnp.sum(mask.astype(jnp.int32))
+
+    room0 = B - q.rear[q.tail_blk]
+    n_new = jnp.maximum(0, -(-(K - room0) // B)).astype(jnp.int32)  # ceil div, >=0
+
+    # --- allocate up to span new blocks from the use[] bitmap (alg. 8 scans
+    # use[] for a free block; we do the scan as one vector ranking) ---
+    free = ~q.use
+    frank = jnp.cumsum(free.astype(jnp.int32)) - 1         # rank among free blocks
+    slot_of = jnp.where(free & (frank < span), frank, span)
+    new_ids = jnp.full((span,), NO_BLK).at[slot_of].set(
+        jnp.arange(M, dtype=jnp.int32), mode="drop")
+    j_idx = jnp.arange(span, dtype=jnp.int32)
+    alloc = (j_idx < n_new) & (new_ids >= 0)               # blocks we truly take
+    got_all = jnp.sum(alloc.astype(jnp.int32)) == n_new
+
+    # --- lane -> (block, slot) ---
+    in_tail = offs < room0
+    j_lane = jnp.where(in_tail, 0, (offs - room0) // B)    # new-block index
+    blk = jnp.where(
+        in_tail,
+        q.tail_blk,
+        jnp.where(j_lane < span, new_ids[jnp.clip(j_lane, 0, span - 1)], NO_BLK),
+    )
+    slot = jnp.where(in_tail, q.rear[q.tail_blk] + offs, (offs - room0) % B)
+    # allocation shortfalls only ever cut a *suffix* of the needed blocks
+    # (free-rank assignment is in order), so failed lanes are a FIFO-safe tail
+    del got_all
+    ok = mask & (blk >= 0) & (slot < B)
+
+    flat = jnp.where(ok, blk * B + slot, M * B)            # OOB -> dropped
+    data = q.data.reshape(-1).at[flat].set(vals.astype(q.data.dtype), mode="drop").reshape(M, B)
+    fe = q.fe.reshape(-1).at[flat].set(jnp.int8(FE_FULL), mode="drop").reshape(M, B)
+
+    # --- counters & links ---
+    k_ok = jnp.sum(ok, dtype=jnp.int32)
+    take_tail = jnp.minimum(k_ok, jnp.maximum(room0, 0)).astype(jnp.int32)
+    rear = q.rear.at[q.tail_blk].add(take_tail)
+    new_counts = jnp.clip(k_ok - take_tail - j_idx * B, 0, B).astype(jnp.int32)
+    rear = rear.at[jnp.where(alloc, new_ids, M)].set(new_counts, mode="drop")
+    front = q.front.at[jnp.where(alloc, new_ids, M)].set(0, mode="drop")
+    fe_rows = jnp.where(alloc, new_ids, M)
+    use = q.use.at[fe_rows].set(True, mode="drop")
+    wclosed = q.wclosed
+    # wclose every block that is now full (rear == B): tail + interior new blocks
+    wclosed = wclosed.at[q.tail_blk].set(jnp.where(rear[q.tail_blk] >= B, True, wclosed[q.tail_blk]))
+    full_new = alloc & (new_counts >= B)
+    wclosed = wclosed.at[jnp.where(full_new, new_ids, M)].set(True, mode="drop")
+
+    # chain links: tail -> new0 -> new1 -> ...
+    prev = jnp.concatenate([q.tail_blk[None], new_ids[:-1]])
+    link_ok = alloc
+    nxt = q.nxt.at[jnp.where(link_ok, prev, M)].set(new_ids, mode="drop")
+    n_alloc = jnp.sum(alloc, dtype=jnp.int32)
+    tail_blk = jnp.where(n_alloc > 0, new_ids[jnp.maximum(n_alloc - 1, 0)], q.tail_blk)
+
+    q2 = q._replace(data=data, fe=fe, front=front, rear=rear, wclosed=wclosed,
+                    nxt=nxt, use=use, tail_blk=tail_blk,
+                    pushed=q.pushed + k_ok.astype(jnp.int64))
+    return q2, ok
+
+
+def pop_batch(q: RingQueue, n_lanes: int, want: jnp.ndarray | None = None):
+    """Batched pop (paper algs. 9+10). Returns (q', vals, got_mask).
+
+    Exhausted wclosed blocks are rclosed, unlinked, reset and recycled
+    (recycle counter bump — the ABA guard); the tail block is never recycled
+    (alg. 10's `n != cn` check).
+    """
+    B, M = q.block_size, q.max_blocks
+    span = math.ceil(n_lanes / B) + 1
+    if want is None:
+        want = jnp.ones((n_lanes,), bool)
+    want = want.astype(bool)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+
+    ids = _chain(q, q.head_blk, span)                      # [span]
+    safe = jnp.maximum(ids, 0)
+    valid_blk = ids >= 0
+    fronts = jnp.where(valid_blk, q.front[safe], 0)
+    rears = jnp.where(valid_blk, q.rear[safe], 0)
+    avail = jnp.maximum(rears - fronts, 0)
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(avail)])
+    total = cum[-1]
+
+    got = want & (rank < total)
+    j = jnp.searchsorted(cum[1:], rank, side="right").astype(jnp.int32)
+    j = jnp.clip(j, 0, span - 1)
+    blk = safe[j]
+    slot = fronts[j] + rank - cum[j]
+    flat = jnp.where(got, blk * B + slot, M * B)
+
+    vals = q.data.reshape(-1)[jnp.minimum(flat, M * B - 1)]
+    fe_at = q.fe.reshape(-1)[jnp.minimum(flat, M * B - 1)]
+    got = got & (fe_at == FE_FULL)                          # invariant guard (retry semantics)
+    vals = jnp.where(got, vals, jnp.zeros((), q.data.dtype))
+
+    fe = q.fe.reshape(-1).at[jnp.where(got, flat, M * B)].set(
+        jnp.int8(FE_CONSUMED), mode="drop").reshape(M, B)
+    k = jnp.sum(got, dtype=jnp.int32)
+    taken_j = jnp.clip(k - cum[:-1], 0, avail).astype(jnp.int32)
+    front = q.front.at[jnp.where(valid_blk, ids, M)].add(taken_j, mode="drop")
+
+    # --- recycle exhausted blocks (deleteNode) ---
+    new_fronts = fronts + taken_j
+    dead = valid_blk & q.wclosed[safe] & (new_fronts >= B) & (ids != q.tail_blk)
+    dead_rows = jnp.where(dead, ids, M)
+    fe = fe.at[dead_rows].set(jnp.int8(FE_EMPTY), mode="drop")
+    front = front.at[dead_rows].set(0, mode="drop")
+    rear = q.rear.at[dead_rows].set(0, mode="drop")
+    wclosed = q.wclosed.at[dead_rows].set(False, mode="drop")
+    rclosed = q.rclosed.at[dead_rows].set(False, mode="drop")
+    nxt = q.nxt.at[dead_rows].set(NO_BLK, mode="drop")
+    use = q.use.at[dead_rows].set(False, mode="drop")
+    recycles = q.recycles.at[dead_rows].add(jnp.uint32(1), mode="drop")
+
+    # head advances to the first non-dead chain block (tail if all dead)
+    alive = valid_blk & ~dead
+    first_alive = jnp.argmax(alive)
+    any_alive = jnp.any(alive)
+    head_blk = jnp.where(any_alive, safe[first_alive], q.tail_blk)
+
+    q2 = q._replace(fe=fe, front=front, rear=rear, wclosed=wclosed,
+                    rclosed=rclosed, nxt=nxt, use=use, recycles=recycles,
+                    head_blk=head_blk, popped=q.popped + k.astype(jnp.int64))
+    return q2, vals, got
+
+
+def push_one(q: RingQueue, val) -> tuple[RingQueue, jnp.ndarray]:
+    q2, ok = push_batch(q, jnp.asarray([val], q.data.dtype), jnp.ones((1,), bool))
+    return q2, ok[0]
+
+
+def pop_one(q: RingQueue):
+    q2, vals, got = pop_batch(q, 1)
+    return q2, vals[0], got[0]

@@ -1,0 +1,230 @@
+"""Split-order hash tables (paper §VII-VIII, after Shalev & Shavit).
+
+The split-order idea: keep entries ordered by the BIT-REVERSED hash; a table
+of M = 2^m slots partitions that order into M contiguous segments (the low m
+hash bits, reversed, are the top m bits of the sort key). Doubling M splits
+every segment in half — rehash with ZERO data movement ("splitting performed
+the required rehashing without data migration").
+
+TPU adaptation: the paper's linked list + dummy nodes become one sorted array
+(dummy nodes = implicit segment boundaries found by searchsorted); the paper's
+recursive parent-slot initialization disappears entirely (anchors are
+computed, not stored) — which is the same cache-miss pathology the paper
+measured in its one-level variant (table VI), here showing up as scattered
+binary-search gathers over a large array. The two-level variant routes by the
+TOP hash bits to one of T small tables first (the paper's NUMA partitioning),
+so the binary search touches one small contiguous region — the VMEM-tile
+analogue of the paper's locality win.
+
+Resizing is a scalar bump of `n_slots` under the occupancy rule
+n > n_slots * max_load — observable, costless, and exactly the paper's rule.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import KEY_INF, bitrev64, dup_in_run, hash64
+
+_WINDOW = 4  # rk-collision scan width (64-bit hash collisions are ~0)
+
+
+class SplitOrderHash(NamedTuple):
+    rk: jnp.ndarray       # [C] bit-reversed hash, sorted, KEY_INF pad
+    keys: jnp.ndarray     # [C] original keys
+    vals: jnp.ndarray     # [C]
+    n: jnp.ndarray        # scalar int32
+    n_slots: jnp.ndarray  # scalar int32 (power of two, grows by doubling)
+    max_load: int
+
+    @property
+    def capacity(self) -> int:
+        return self.rk.shape[0]
+
+
+def splitorder_init(capacity: int, seed_slots: int, max_load: int = 16) -> SplitOrderHash:
+    assert seed_slots & (seed_slots - 1) == 0
+    return SplitOrderHash(
+        rk=jnp.full((capacity,), KEY_INF),
+        keys=jnp.full((capacity,), KEY_INF),
+        vals=jnp.zeros((capacity,), jnp.uint64),
+        n=jnp.int32(0),
+        n_slots=jnp.int32(seed_slots),
+        max_load=max_load,
+    )
+
+
+def _rk_of(keys: jnp.ndarray) -> jnp.ndarray:
+    return bitrev64(hash64(keys))
+
+
+def _window_match(rk_arr, key_arr, pos, rk_q, key_q):
+    """Scan _WINDOW entries from pos for (rk, key) equality (collision runs)."""
+    C = rk_arr.shape[0]
+    idx = jnp.clip(pos[:, None] + jnp.arange(_WINDOW, dtype=jnp.int32)[None, :], 0, C - 1)
+    hit = (rk_arr[idx] == rk_q[:, None]) & (key_arr[idx] == key_q[:, None])
+    found = jnp.any(hit, axis=1)
+    at = pos + jnp.argmax(hit, axis=1).astype(jnp.int32)
+    return found, jnp.clip(at, 0, C - 1)
+
+
+def splitorder_find(h: SplitOrderHash, keys: jnp.ndarray):
+    rkq = _rk_of(keys)
+    pos = jnp.searchsorted(h.rk, rkq, side="left").astype(jnp.int32)
+    found, at = _window_match(h.rk, h.keys, pos, rkq, keys)
+    found = found & (keys != KEY_INF)
+    return found, jnp.where(found, h.vals[at], jnp.uint64(0))
+
+
+def splitorder_insert(h: SplitOrderHash, keys: jnp.ndarray, vals: jnp.ndarray,
+                      mask: jnp.ndarray | None = None):
+    """Bulk sorted merge by reversed hash + occupancy-triggered slot doubling.
+    Returns (h', inserted[K], existed[K])."""
+    K = keys.shape[0]
+    C = h.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+    rkq = _rk_of(keys)
+
+    order = jnp.argsort(rkq, stable=True)
+    srk, sk, sv, sm = rkq[order], keys[order], vals[order], mask[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool),
+                            (srk[1:] == srk[:-1]) & (sk[1:] == sk[:-1])])
+    dup = dup_in_run(same, sm)
+
+    pos = jnp.searchsorted(h.rk, srk, side="left").astype(jnp.int32)
+    exists, _ = _window_match(h.rk, h.keys, pos, srk, sk)
+    exists = exists & sm & ~dup
+
+    new = sm & ~dup & ~exists
+    rank = jnp.cumsum(new.astype(jnp.int32)) - 1
+    new = new & (h.n + rank < C)
+    n_new = jnp.sum(new).astype(jnp.int32)
+
+    crank = jnp.where(new, rank, K)
+    nrk = jnp.full((K,), KEY_INF).at[crank].set(srk, mode="drop")
+    nk = jnp.full((K,), KEY_INF).at[crank].set(sk, mode="drop")
+    nv = jnp.zeros((K,), jnp.uint64).at[crank].set(sv, mode="drop")
+
+    old_idx = jnp.arange(C, dtype=jnp.int32)
+    dest_old = old_idx + jnp.searchsorted(nrk, h.rk, side="left").astype(jnp.int32)
+    dest_old = jnp.where(old_idx < h.n, dest_old, C)
+    dest_new = (jnp.searchsorted(h.rk, nrk, side="right").astype(jnp.int32)
+                + jnp.arange(K, dtype=jnp.int32))
+    dest_new = jnp.where(jnp.arange(K) < n_new, dest_new, C)
+
+    rk2 = jnp.full((C,), KEY_INF).at[dest_old].set(h.rk, mode="drop")
+    rk2 = rk2.at[dest_new].set(nrk, mode="drop")
+    k2 = jnp.full((C,), KEY_INF).at[dest_old].set(h.keys, mode="drop")
+    k2 = k2.at[dest_new].set(nk, mode="drop")
+    v2 = jnp.zeros((C,), jnp.uint64).at[dest_old].set(h.vals, mode="drop")
+    v2 = v2.at[dest_new].set(nv, mode="drop")
+
+    n2 = h.n + n_new
+    # occupancy > n_slots * max_load -> double the slots (zero movement)
+    grow = n2 > h.n_slots * h.max_load
+    n_slots = jnp.where(grow, h.n_slots * 2, h.n_slots).astype(jnp.int32)
+
+    h2 = h._replace(rk=rk2, keys=k2, vals=v2, n=n2, n_slots=n_slots)
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(jnp.arange(K, dtype=jnp.int32))
+    return h2, new[inv], (exists | dup)[inv]
+
+
+def splitorder_slot_bounds(h: SplitOrderHash, keys: jnp.ndarray):
+    """Segment [lo, hi) of each key's slot under the CURRENT n_slots — the
+    implicit dummy-node anchors; used by the locality bench (table VI)."""
+    m = jnp.log2(h.n_slots.astype(jnp.float64)).astype(jnp.int32)
+    slot = (hash64(keys) & (h.n_slots - 1).astype(jnp.uint64))
+    lo_rk = bitrev64(slot)                      # slot bits land at the top
+    step = (KEY_INF >> m.astype(jnp.uint64))    # segment width in rk space
+    hi_rk = lo_rk + step
+    wrap = hi_rk < lo_rk                        # last slot: saturate to array end
+    lo = jnp.searchsorted(h.rk, lo_rk, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(h.rk, hi_rk, side="left").astype(jnp.int32)
+    hi = jnp.where(wrap, h.n, hi)
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# Two-level split-order: route by top hash bits to T small tables
+# ---------------------------------------------------------------------------
+
+class TwoLevelSplitOrder(NamedTuple):
+    rk: jnp.ndarray       # [T, C2]
+    keys: jnp.ndarray     # [T, C2]
+    vals: jnp.ndarray     # [T, C2]
+    n: jnp.ndarray        # [T] int32
+    n_slots: jnp.ndarray  # [T] int32 — per-table resizing (paper: "resizing
+                          # operations performed per table")
+    max_load: int
+
+    @property
+    def num_tables(self) -> int:
+        return self.rk.shape[0]
+
+    @property
+    def table_capacity(self) -> int:
+        return self.rk.shape[1]
+
+
+def twolevel_splitorder_init(num_tables: int, capacity: int, seed_slots: int,
+                             max_load: int = 16) -> TwoLevelSplitOrder:
+    assert num_tables & (num_tables - 1) == 0
+    return TwoLevelSplitOrder(
+        rk=jnp.full((num_tables, capacity), KEY_INF),
+        keys=jnp.full((num_tables, capacity), KEY_INF),
+        vals=jnp.zeros((num_tables, capacity), jnp.uint64),
+        n=jnp.zeros((num_tables,), jnp.int32),
+        n_slots=jnp.full((num_tables,), seed_slots, jnp.int32),
+        max_load=max_load,
+    )
+
+
+def _table_of(h: TwoLevelSplitOrder, keys: jnp.ndarray) -> jnp.ndarray:
+    t_bits = h.num_tables.bit_length() - 1
+    return (hash64(keys) >> jnp.uint64(64 - t_bits)).astype(jnp.int32) if t_bits \
+        else jnp.zeros(keys.shape, jnp.int32)
+
+
+def twolevel_splitorder_find(h: TwoLevelSplitOrder, keys: jnp.ndarray):
+    t = _table_of(h, keys)
+    rkq = _rk_of(keys)
+    # vectorized per-lane binary search within the owning table row
+    rows_rk = h.rk[t]                       # [K, C2] gather of table rows
+    pos = jax.vmap(lambda row, q: jnp.searchsorted(row, q, side="left"))(rows_rk, rkq)
+    pos = pos.astype(jnp.int32)
+    C2 = h.table_capacity
+    idx = jnp.clip(pos[:, None] + jnp.arange(_WINDOW, dtype=jnp.int32)[None, :], 0, C2 - 1)
+    hit = (rows_rk[jnp.arange(keys.shape[0])[:, None], idx] == rkq[:, None]) \
+        & (h.keys[t[:, None], idx] == keys[:, None])
+    found = jnp.any(hit, axis=1) & (keys != KEY_INF)
+    at = jnp.clip(pos + jnp.argmax(hit, axis=1).astype(jnp.int32), 0, C2 - 1)
+    return found, jnp.where(found, h.vals[t, at], jnp.uint64(0))
+
+
+def twolevel_splitorder_insert(h: TwoLevelSplitOrder, keys: jnp.ndarray,
+                               vals: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Route lanes to owner tables, then a vmapped per-table sorted merge —
+    the same two-phase motion as the paper's queue-to-NUMA-node pipeline."""
+    K = keys.shape[0]
+    T, C2 = h.rk.shape
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+    t = _table_of(h, keys)
+    rkq = _rk_of(keys)
+
+    def one_table(rk_row, key_row, val_row, n_row, slots_row, tbl_id):
+        sub = SplitOrderHash(rk=rk_row, keys=key_row, vals=val_row, n=n_row,
+                             n_slots=slots_row, max_load=h.max_load)
+        m = mask & (t == tbl_id)
+        sub2, ins, ex = splitorder_insert(sub, keys, vals, m)
+        return sub2.rk, sub2.keys, sub2.vals, sub2.n, sub2.n_slots, ins, ex
+
+    rk2, k2, v2, n2, s2, ins, ex = jax.vmap(one_table)(
+        h.rk, h.keys, h.vals, h.n, h.n_slots, jnp.arange(T, dtype=jnp.int32))
+    h2 = h._replace(rk=rk2, keys=k2, vals=v2, n=n2, n_slots=s2)
+    return h2, jnp.any(ins, axis=0), jnp.any(ex, axis=0)

@@ -1,0 +1,131 @@
+"""Data pipeline: deterministic synthetic token stream + prefetch through the
+paper's structures.
+
+Staging buffers come from a §V block pool; the producer thread allocates a
+buffer, fills it, and pushes its id onto a §III ring queue; the consumer pops
+ids and recycles buffers — the paper's "queues for load balancing workloads"
+applied to input pipelining.
+
+Determinism & fault tolerance: batch(step, shard) is a pure function of
+(seed, step, shard) — restart from any checkpoint step replays the exact
+stream; no pipeline state needs checkpointing beyond the step counter.
+
+Straggler mitigation: the consumer takes whichever prefetched batch is ready
+(depth-R redundancy); a producer stall beyond `deadline` is counted and the
+consumer synthesizes the batch inline (deterministic — same function) instead
+of blocking the whole step: slow data hosts never stall the mesh.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.blockpool import blockpool_init, pool_alloc, pool_free
+from repro.core.ringqueue import pop_one, push_one, queue_init
+
+
+def synth_batch(cfg, shape, seed: int, step: int, shard: int = 0,
+                n_shards: int = 1):
+    """Pure function of (seed, step, shard): the replayable batch."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step, shard, n_shards]))
+    b = shape.global_batch // n_shards
+    s = shape.seq_len
+    if cfg.n_codebooks:
+        toks = rng.integers(0, cfg.vocab_size, (b, cfg.n_codebooks, s + 1))
+        return {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+                "labels": jnp.asarray(toks[..., 1:], jnp.int32),
+                "loss_mask": jnp.ones((b, s), jnp.float32)}
+    ft = cfg.frontend_tokens
+    toks = rng.integers(0, cfg.vocab_size, (b, s - ft + 1))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(
+                 np.pad(toks[:, 1:], ((0, 0), (ft, 0))), jnp.int32),
+             "loss_mask": jnp.concatenate(
+                 [jnp.zeros((b, ft), jnp.float32),
+                  jnp.ones((b, s - ft), jnp.float32)], axis=1)}
+    if ft:
+        emb = rng.standard_normal((b, ft, cfg.d_model)).astype(np.float32) * 0.02
+        batch["prefix_embeds"] = jnp.asarray(emb)
+    return batch
+
+
+class PrefetchPipeline:
+    """Producer thread + block-pool staging + ring-queue handoff."""
+
+    def __init__(self, make_batch, depth: int = 4, deadline: float = 30.0,
+                 delay_injector=None):
+        self.make_batch = make_batch
+        self.depth = depth
+        self.deadline = deadline
+        self.delay_injector = delay_injector          # test hook (straggler)
+        self.pool = blockpool_init(depth)
+        self.queue = queue_init(max_blocks=4, block_size=max(depth, 4),
+                                dtype=jnp.uint64)
+        self.buffers = [None] * depth
+        self.straggler_skips = 0
+        self._next_produce = 0
+        self._next_consume = 0
+        self._lock = threading.Lock()
+        self._stop = False
+        self._t = threading.Thread(target=self._producer, daemon=True)
+        self._t.start()
+
+    def _producer(self):
+        while not self._stop:
+            with self._lock:
+                step = self._next_produce
+            if step - self._next_consume >= self.depth:
+                time.sleep(0.001)
+                continue
+            if self.delay_injector:
+                self.delay_injector(step)
+            batch = self.make_batch(step)
+            with self._lock:   # guards the (queue, pool, buffers) triple —
+                # the device-side ops are linearizable; swapping the PYTHON
+                # references between threads is not, hence the mutex
+                self.pool, ids, _, got = pool_alloc(self.pool,
+                                                    jnp.ones((1,), bool))
+                if not bool(got[0]):
+                    pass
+                else:
+                    bid = int(ids[0])
+                    self.buffers[bid] = (step, batch)
+                    self.queue, ok = push_one(self.queue, np.uint64(bid))
+                    self._next_produce = step + 1
+                    continue
+            time.sleep(0.001)
+
+    def get(self, step: int):
+        """Batch for `step` — from prefetch if ready, else synthesized inline
+        (counted as a straggler skip)."""
+        t0 = time.monotonic()
+        while True:
+            with self._lock:
+                self.queue, val, got = pop_one(self.queue)
+                if bool(got):
+                    bid = int(val)
+                    got_step, batch = self.buffers[bid]
+                    self.buffers[bid] = None
+                    self.pool = pool_free(self.pool,
+                                          jnp.asarray([bid], jnp.int32),
+                                          jnp.ones((1,), bool))
+                    self._next_consume = max(self._next_consume, got_step + 1)
+                else:
+                    batch = None
+            if batch is not None:
+                if got_step == step:
+                    return batch
+                continue  # stale prefetch (post-restart) — drop & keep looking
+            if time.monotonic() - t0 > self.deadline:
+                self.straggler_skips += 1
+                self._next_consume = max(self._next_consume, step + 1)
+                return self.make_batch(step)
+            time.sleep(0.0005)
+
+    def stop(self):
+        self._stop = True
+        self._t.join(timeout=5)

@@ -1,0 +1,99 @@
+"""Causal flash attention — Pallas TPU kernel.
+
+TPU mapping: grid = (B*H, num_q_blocks, num_k_blocks) with the k axis
+"arbitrary" (sequential) so the online-softmax accumulators (m, l, acc) live
+in VMEM scratch across k steps. Q/K/V stream through VMEM in (block, 128)
+tiles — MXU-aligned; the causal upper triangle is skipped entirely via
+pl.when (block-level) + in-block iota masking (diagonal blocks).
+
+GQA without materializing kv heads: K/V refs are laid out [B*Hkv, S, D] and
+the BlockSpec index_map divides the q-head grid index by the group size —
+the kv block is fetched once per group straight from HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, scale: float, block_q: int, block_k: int, causal: bool):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # k block
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    should = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(should if causal else j >= 0)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            ki = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_ref[...]                               # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, scale: float, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True):
+    """q: [BH, Sq, D]; k/v: [BKV, Sk, D] with BH = BKV * group.
+
+    Layout contract: D padded to 128 (MXU lane width) by ops.py.
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    grid = (bh, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(_fa_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),    # m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # l
+        ],
+        interpret=interpret,
+    )(q, k, v)

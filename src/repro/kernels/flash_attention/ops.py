@@ -1,0 +1,30 @@
+"""jit'd wrapper: [B,S,H,D] GQA layout -> kernel layout, D padded to 128."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, H, D] (q.dtype)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    dp = -(-d // 128) * 128
+    pad = dp - d
+
+    def to_bhsd(x, heads):
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        return x.transpose(0, 2, 1, 3).reshape(b * heads, x.shape[1], dp)
+
+    o = flash_attention_bhsd(to_bhsd(q, h), to_bhsd(k, hkv), to_bhsd(v, hkv),
+                             scale=scale, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    o = o.reshape(b, h, sq, dp).transpose(0, 2, 1, 3)
+    return o[..., :d]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for causal flash attention (GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: [B, Sq, H, D]; k/v: [B, Sk, Hkv, D]; returns [B, Sq, H, D] f32."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        scores = jnp.where(mask[None, :, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d)

@@ -1,0 +1,100 @@
+"""Paged decode attention — Pallas TPU kernel over block-pool KV pages.
+
+This kernel is where the paper's §V memory manager meets the MXU: KV pages
+are pool blocks (page = the locality unit = one VMEM tile), the block table
+is the per-request page list, and the kernel walks it with SCALAR PREFETCH —
+the block-table entry selects which pool page the next grid step DMAs into
+VMEM (pl.BlockSpec index_map reads the prefetched table). Online softmax
+accumulates across pages in VMEM scratch; page boundaries never touch HBM
+twice. Pages whose table entry is -1 (unallocated — the pool's free side)
+are skipped entirely via pl.when, so ragged request lengths cost no DMA.
+
+Grid: (B, Hkv, n_pages_per_req)  — arbitrary (sequential) page axis.
+q for a kv-head group is [group, D] — small; lives in VMEM whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(tables_ref, lengths_ref,            # scalar-prefetch operands
+               q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    page_id = tables_ref[b, j]
+    live = (page_id >= 0) & (j * page < lengths_ref[b])
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)            # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ki = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(ki < lengths_ref[b], s, NEG_INF)    # ragged tail
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == np_ - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention_grouped(q, k_pool, v_pool, block_tables, lengths, *,
+                            scale: float | None = None, interpret: bool = True):
+    """q: [B, Hkv, G, D]; pools: [N, page, Hkv, D]; tables: [B, P]; -> [B, Hkv, G, D].
+
+    Pass `scale` when D was padded (the true head dim's rsqrt)."""
+    b, hkv, g, d = q.shape
+    n, page, _, _ = k_pool.shape
+    p = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_pa_kernel, page=page, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, p),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, j, T, L: (bb, h, 0, 0)),
+            # the §V pool page selected by the prefetched block table:
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, j, T, L: (jnp.maximum(T[bb, j], 0), 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, j, T, L: (jnp.maximum(T[bb, j], 0), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, j, T, L: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pool, v_pool)

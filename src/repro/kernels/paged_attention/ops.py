@@ -1,0 +1,28 @@
+"""jit'd wrapper: [B,H,D] q + pool pages -> paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_grouped
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    interpret: bool = True):
+    """q: [B, H, D]; pools: [N_pages, page, Hkv, D]; tables [B, P] (-1 pad);
+    lengths [B]. Returns [B, H, D]."""
+    b, h, d = q.shape
+    hkv = k_pool.shape[2]
+    g = h // hkv
+    dp = -(-d // 128) * 128
+    pad = dp - d
+    qg = jnp.pad(q, ((0, 0), (0, 0), (0, pad))).reshape(b, hkv, g, dp)
+    kp = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    vp = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    o = paged_attention_grouped(qg, kp, vp, block_tables.astype(jnp.int32),
+                                lengths.astype(jnp.int32),
+                                scale=1.0 / (d ** 0.5), interpret=interpret)
+    return o.reshape(b, h, dp)[..., :d]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for paged decode attention over block-pool KV pages."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """q: [B, H, D] one decode token per request.
+    k_pool/v_pool: [N_pages, page, Hkv, D] (the §V block pool's data arrays).
+    block_tables: [B, P] int32 page ids (-1 pad); lengths: [B] int32.
+    Returns [B, H, D] f32."""
+    b, h, d = q.shape
+    n_pages, page, hkv, _ = k_pool.shape
+    p = block_tables.shape[1]
+    g = h // hkv
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pool[safe]                              # [B, P, page, Hkv, D]
+    v = v_pool[safe]
+    k = k.reshape(b, p * page, hkv, d)
+    v = v.reshape(b, p * page, hkv, d)
+    pos = jnp.arange(p * page)[None, :]
+    valid = (pos < lengths[:, None]) & (block_tables >= 0).repeat(page, axis=1)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, d)

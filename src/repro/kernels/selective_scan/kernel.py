@@ -1,0 +1,81 @@
+"""Fused selective scan — Pallas TPU kernel (the §Perf fix for the SSM
+memory wall).
+
+Why: the XLA chunked path materializes the hidden tensor [B, L, D, N] in HBM
+(13+ TB/step for hymba@train_4k — measured, EXPERIMENTS.md §Perf). This
+kernel keeps the recurrent state h [D_blk, N] in VMEM for the whole sequence:
+HBM traffic collapses to the in/out streams (x, dt, B, C, y) — a ~200×
+memory-term reduction for the SSM layers.
+
+TPU mapping:
+  grid = (B, D_blocks, S_chunks); the S axis is sequential ("arbitrary") so
+  the VMEM scratch h persists across chunks. Inside a chunk, a fori_loop
+  steps the recurrence; each step is a [D_blk, N] VPU elementwise update +
+  an N-contraction — latency-bound but HBM-minimal (the mamba2/SSD matrix
+  reformulation is the MXU-friendly successor; out of scope here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ss_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_ref,
+               *, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # [L, Dblk]
+    dt = dt_ref[0].astype(jnp.float32)     # [L]
+    bm = b_ref[0].astype(jnp.float32)      # [L, N]
+    cm = c_ref[0].astype(jnp.float32)      # [L, N]
+    a = a_ref[...].astype(jnp.float32)     # [Dblk, N]
+
+    def step(t, carry):
+        h, ys = carry
+        da = jnp.exp(dt[t] * a)                            # [Dblk, N]
+        h = da * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        yt = jnp.sum(h * cm[t][None, :], axis=1)           # [Dblk]
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, yt[None], t, axis=0)
+        return h, ys
+
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_ref[...], ys0))
+    h_ref[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def selective_scan_blocks(x, dt, bmat, cmat, a, *, d_block: int = 512,
+                          chunk: int = 256, interpret: bool = True):
+    """x: [B,S,D]; dt: [B,S]; bmat/cmat: [B,S,N]; a: [D,N] -> y [B,S,D]."""
+    b, s, d = x.shape
+    n = bmat.shape[-1]
+    d_block = min(d_block, d)
+    chunk = min(chunk, s)
+    assert d % d_block == 0 and s % chunk == 0
+    grid = (b, d // d_block, s // chunk)
+
+    kernel = functools.partial(_ss_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda bb, dd, jj: (bb, jj, dd)),
+            pl.BlockSpec((1, chunk), lambda bb, dd, jj: (bb, jj)),
+            pl.BlockSpec((1, chunk, n), lambda bb, dd, jj: (bb, jj, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, dd, jj: (bb, jj, 0)),
+            pl.BlockSpec((d_block, n), lambda bb, dd, jj: (dd, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block),
+                               lambda bb, dd, jj: (bb, jj, dd)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a)

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the fused selective scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_blocks
+
+
+@partial(jax.jit, static_argnames=("d_block", "chunk", "interpret"))
+def selective_scan(x, dt, bmat, cmat, a, *, d_block: int = 512,
+                   chunk: int = 256, interpret: bool = True):
+    """Fused mamba-1 scan: x [B,S,D], dt [B,S], B/C [B,S,N], A [D,N] -> y."""
+    return selective_scan_blocks(x, dt, bmat, cmat, a, d_block=d_block,
+                                 chunk=chunk, interpret=interpret)

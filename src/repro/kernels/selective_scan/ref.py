@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the selective scan (mamba-1 recurrence).
+
+h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t * B_t     (per channel d, state n)
+y_t = sum_n h_t[d, n] * C_t[n]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, bmat, cmat, a, h0=None):
+    """x: [B,S,D]; dt: [B,S]; bmat/cmat: [B,S,N]; a: [D,N] (negative).
+    Returns (y [B,S,D] f32, h_last [B,D,N] f32)."""
+    b, s, d = x.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # [B,D],[B],[B,N],[B,N]
+        da = jnp.exp(dtt[:, None, None] * a[None])           # [B,D,N]
+        h = da * h + (dtt[:, None] * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0).astype(jnp.float32),
+          bmat.transpose(1, 0, 2).astype(jnp.float32),
+          cmat.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h

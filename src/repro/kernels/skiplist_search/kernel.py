@@ -1,0 +1,91 @@
+"""Batched deterministic-skiplist search — Pallas TPU kernel.
+
+Why this kernelizes well (and the randomized skiplist would not): the
+1-2-3-4 criterion guarantees EXACTLY L descent steps with a fan-out-4 probe
+each — a static loop with fixed-shape 4-wide gathers. Determinism = static
+shapes = full lane occupancy (DESIGN.md §2's inversion of the paper's CPU
+conclusion).
+
+TPU mapping:
+  * level-major layout: every level is one contiguous row — the whole index
+    stack ([L, C1] u32 x3) is VMEM-resident via whole-array BlockSpecs
+    (the skiplist path through HBM pointer-land on CPU becomes L VMEM hops).
+  * queries tile [T] per grid step; 64-bit keys travel as (hi, lo) u32 pairs
+    compared lexicographically (TPU has no native u64 lanes — this is the
+    hardware adaptation of the paper's 128-bit key|next words).
+  * the 4-wide child probe is a dynamic gather of int32 lanes (mosaic
+    dynamic_gather; validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _le(qh, ql, kh, kl):
+    return (qh < kh) | ((qh == kh) & (ql <= kl))
+
+
+def _sk_kernel(qh_ref, ql_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
+               tm_ref, found_ref, idx_ref, *, levels: int, fanout: int):
+    qh = qh_ref[...]
+    ql = ql_ref[...]
+    t = qh.shape[0]
+    c1 = lh_ref.shape[1]
+    cap = th_ref.shape[0]
+
+    # top probe
+    ok = _le(qh[:, None], ql[:, None], lh_ref[levels - 1, :fanout][None, :],
+             ll_ref[levels - 1, :fanout][None, :])
+    i = jnp.argmax(ok, axis=1).astype(jnp.int32)
+    for r in range(levels - 1, -1, -1):
+        start = jnp.take(lc_ref[r], jnp.clip(i, 0, c1 - 1), axis=0)
+        bh = th_ref[...] if r == 0 else lh_ref[r - 1]
+        bl = tl_ref[...] if r == 0 else ll_ref[r - 1]
+        hi = bh.shape[0]
+        idx = jnp.clip(start[:, None] + jax.lax.broadcasted_iota(
+            jnp.int32, (t, fanout), 1), 0, hi - 1)
+        ck_h = jnp.take(bh, idx.reshape(-1), axis=0).reshape(t, fanout)
+        ck_l = jnp.take(bl, idx.reshape(-1), axis=0).reshape(t, fanout)
+        ok = _le(qh[:, None], ql[:, None], ck_h, ck_l)
+        sel = jnp.argmax(ok, axis=1).astype(jnp.int32)
+        i = start + sel
+    i = jnp.clip(i, 0, cap - 1)
+    fh = jnp.take(th_ref[...], i, axis=0)
+    fl = jnp.take(tl_ref[...], i, axis=0)
+    fm = jnp.take(tm_ref[...], i, axis=0)
+    found_ref[...] = ((fh == qh) & (fl == ql) & (fm == 0)).astype(jnp.int8)
+    idx_ref[...] = i
+
+
+def skiplist_search_tiles(q_hi, q_lo, lvl_hi, lvl_lo, lvl_child,
+                          term_hi, term_lo, term_mark, *, tile: int = 256,
+                          interpret: bool = True):
+    """q_*: [T]; lvl_*: [L, C1]; term_*: [C]. Returns (found i8[T], idx i32[T])."""
+    t = q_hi.shape[0]
+    L, c1 = lvl_hi.shape
+    cap = term_hi.shape[0]
+    tile = min(tile, t)
+    assert t % tile == 0
+    grid = (t // tile,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+
+    kernel = functools.partial(_sk_kernel, levels=L, fanout=4)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda g: (g,)),
+            pl.BlockSpec((tile,), lambda g: (g,)),
+            whole(lvl_hi), whole(lvl_lo), whole(lvl_child),
+            whole(term_hi), whole(term_lo), whole(term_mark),
+        ],
+        out_specs=[pl.BlockSpec((tile,), lambda g: (g,)),
+                   pl.BlockSpec((tile,), lambda g: (g,))],
+        out_shape=[jax.ShapeDtypeStruct((t,), jnp.int8),
+                   jax.ShapeDtypeStruct((t,), jnp.int32)],
+        interpret=interpret,
+    )(q_hi, q_lo, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark)

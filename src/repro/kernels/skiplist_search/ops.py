@@ -1,0 +1,52 @@
+"""jit'd wrapper: DetSkiplist state -> kernel layout (u64 -> u32 pairs,
+levels stacked + padded) -> batched search."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import KEY_INF
+from repro.kernels.skiplist_search.kernel import skiplist_search_tiles
+
+
+def split_u64(x):
+    return ((x >> jnp.uint64(32)).astype(jnp.uint32),
+            (x & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32))
+
+
+def stack_levels(s):
+    """DetSkiplist -> ([L, C1] hi, lo, child) padded with +inf sentinels."""
+    c1 = s.level_keys[0].shape[0]
+    his, los, chs = [], [], []
+    for lk, lc in zip(s.level_keys, s.level_child):
+        pad = c1 - lk.shape[0]
+        lk = jnp.pad(lk, (0, pad), constant_values=KEY_INF)
+        lc = jnp.pad(lc, (0, pad))
+        h, l = split_u64(lk)
+        his.append(h)
+        los.append(l)
+        chs.append(lc.astype(jnp.int32))
+    return jnp.stack(his), jnp.stack(los), jnp.stack(chs)
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def skiplist_search(s, queries, *, tile: int = 256, interpret: bool = True):
+    """Batched Find on a DetSkiplist via the Pallas kernel.
+    Returns (found bool[T], vals u64[T], idx int32[T]) — same contract as
+    core.det_skiplist.find_batch (the pure-jnp production path)."""
+    t = queries.shape[0]
+    pad = (-t) % tile
+    qp = jnp.pad(queries, (0, pad), constant_values=KEY_INF)
+    qh, ql = split_u64(qp)
+    lh, ll, lc = stack_levels(s)
+    th, tl = split_u64(s.term_keys)
+    tm = s.term_mark.astype(jnp.int8)
+    found, idx = skiplist_search_tiles(qh, ql, lh, ll, lc, th, tl, tm,
+                                       tile=tile, interpret=interpret)
+    found = found[:t].astype(bool) & (queries != KEY_INF)
+    idx = idx[:t]
+    vals = jnp.where(found, s.term_vals[jnp.clip(idx, 0, s.capacity - 1)],
+                     jnp.uint64(0))
+    return found, vals, idx

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: batched deterministic-skiplist search over the stacked
+level layout the kernel consumes (keys as u32 hi/lo pairs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _le(qh, ql, kh, kl):
+    return (qh < kh) | ((qh == kh) & (ql <= kl))
+
+
+def skiplist_search_ref(q_hi, q_lo, lvl_hi, lvl_lo, lvl_child, lvl_count,
+                        term_hi, term_lo, term_mark):
+    """q_*: [T] u32; lvl_*: [L, C1]; term_*: [C]. Returns (found bool[T],
+    idx int32[T]). Levels stacked bottom-up: row L-1 is the top."""
+    L, c1 = lvl_hi.shape
+    cap = term_hi.shape[0]
+    t = q_hi.shape[0]
+    # top probe (<= 4 live nodes at the top level)
+    topk_h, topk_l = lvl_hi[L - 1, :4], lvl_lo[L - 1, :4]
+    ge = _le(q_hi[:, None], q_lo[:, None], topk_h[None, :], topk_l[None, :])
+    i = jnp.argmax(ge, axis=1).astype(jnp.int32)
+    for r in range(L - 1, -1, -1):
+        start = lvl_child[r][jnp.clip(i, 0, c1 - 1)]
+        below_h = term_hi if r == 0 else lvl_hi[r - 1]
+        below_l = term_lo if r == 0 else lvl_lo[r - 1]
+        idx = jnp.clip(start[:, None] + jnp.arange(4, dtype=jnp.int32)[None, :],
+                       0, below_h.shape[0] - 1)
+        ok = _le(q_hi[:, None], q_lo[:, None], below_h[idx], below_l[idx])
+        sel = jnp.argmax(ok, axis=1).astype(jnp.int32)
+        i = start + sel
+    i = jnp.clip(i, 0, cap - 1)
+    found = ((term_hi[i] == q_hi) & (term_lo[i] == q_lo)
+             & ~term_mark[i].astype(bool))
+    return found, i

@@ -1,0 +1,61 @@
+"""Serving launcher: reduced-config continuous batching on CPU, or --dryrun
+to lower the full decode/prefill cells on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-405b --dryrun
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        import os
+        import subprocess
+        import sys
+        rc = 0
+        for shape in ("prefill_32k", "decode_32k"):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+                   args.arch, "--shape", shape]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            rc |= subprocess.run(cmd, env=os.environ).returncode
+        raise SystemExit(rc)
+
+    import numpy as np
+    import jax
+    import repro  # noqa: F401
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.serving.engine import Engine, Request
+
+    cfg = get_reduced(args.arch)
+    if cfg.attn_type != "gqa" or cfg.block_pattern != "transformer":
+        raise SystemExit(f"{args.arch}: paged engine serves GQA transformer "
+                         f"families; recurrent archs decode via model state "
+                         f"(see launch/dryrun decode cells)")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_reqs=4, num_pages=64, page_size=8,
+                 max_pages_per_req=8)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(req_id=i,
+                           prompt=rng.integers(1, cfg.vocab_size, 8),
+                           max_new=args.max_new, priority=i % 3))
+    outs = eng.run(max_steps=512)
+    toks = sum(len(v) for v in outs.values())
+    print(f"served {len(outs)} requests / {toks} tokens; "
+          f"pool free={int(eng.kv.pool.num_free())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Training launcher.
+
+Single-host CPU (default): runs the real loop on a reduced/100M config.
+--dryrun: lowers the FULL assigned config on the production mesh instead
+(no allocation; see launch/dryrun.py for the sweep).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-405b --dryrun
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # re-exec through the dryrun module so XLA_FLAGS lands first
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+               args.arch, "--shape", "train_4k"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.run(cmd, env=os.environ).returncode)
+
+    import repro  # noqa: F401
+    from repro.configs import get_reduced
+    from repro.configs.base import ShapeConfig
+    from repro.train.loop import train
+
+    cfg = get_reduced(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    _, _, out = train(cfg, shape, steps=args.steps, ckpt_dir=args.ckpt,
+                      ckpt_every=50 if args.ckpt else 0,
+                      microbatches=args.microbatches)
+    h = out["history"]
+    print(f"final loss {h[-1]['loss']:.4f} over {len(h)} steps")
+
+
+if __name__ == "__main__":
+    main()

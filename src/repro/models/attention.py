@@ -1,0 +1,264 @@
+"""Attention variants: GQA (with qk-norm / bias / sliding window) and MLA.
+
+Three entry points per variant:
+  *_forward  — full-sequence causal (train / prefill)
+  *_prefill  — forward + cache write
+  *_decode   — one token against a contiguous KV cache
+
+The serving engine's paged (block-pool) attention lives in serving/ and
+kernels/paged_attention; these contiguous paths are what the dry-run lowers
+(sequence dim shardable over the model axis — GSPMD inserts the partial-
+softmax collectives; see EXPERIMENTS.md §Perf for the measured choice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_rope, attend_causal, causal_mask, cast,
+                                 dense_init, rms_norm, softmax_attend)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * dh, d, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((dh,), cfg.param_dtype)
+    return p
+
+
+def _qkv(p, cfg, x):
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ct = cfg.compute_dtype
+    q = x @ cast(p["wq"], ct)
+    k = x @ cast(p["wk"], ct)
+    v = x @ cast(p["wv"], ct)
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], ct)
+        k = k + cast(p["bk"], ct)
+        v = v + cast(p["bv"], ct)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, positions, window: int = 0):
+    """x: [B, S, D], positions: [B, S] int32. Returns [B, S, D]."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attend_causal(q, k, v, window, cfg.compute_dtype,
+                      block_q=cfg.attn_block_q, impl=cfg.attn_impl)
+    return o.reshape(b, s, -1) @ cast(p["wo"], cfg.compute_dtype)
+
+
+def gqa_prefill(p, cfg, x, positions, cache_len: int, window: int = 0,
+                past=None):
+    """Forward + return the KV cache (padded to cache_len).
+
+    `past`: {"k","v"} [B, S_past, Hkv, Dh] already-roped prefix KV (prefix
+    cache reuse): the suffix attends over past+new with the right offset."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    off = 0
+    if past is not None:
+        off = past["k"].shape[1]
+        k = jnp.concatenate([past["k"].astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([past["v"].astype(v.dtype), v], axis=1)
+    o = attend_causal(q, k, v, window, cfg.compute_dtype,
+                      block_q=cfg.attn_block_q, impl=cfg.attn_impl,
+                      q_offset=off)
+    y = o.reshape(b, s, -1) @ cast(p["wo"], cfg.compute_dtype)
+    pad = cache_len - s - off
+    kt = jnp.dtype(cfg.kv_cache_dtype)
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kt)
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kt)
+    return y, {"k": kc, "v": vc}
+
+
+def gqa_decode(p, cfg, x, pos, cache, window: int = 0):
+    """x: [B, 1, D]; pos: [B] int32 (write position); contiguous cache.
+
+    The cache seq dim may be sharded over the model axis — the score
+    contraction and softmax then run as GSPMD partial-softmax collectives.
+    """
+    b, _, d = x.shape
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    s_max = cache["k"].shape[1]
+    kt = cache["k"].dtype
+    oh = jax.nn.one_hot(pos, s_max, dtype=jnp.bfloat16)[:, :, None, None]
+    kc = (cache["k"].astype(jnp.bfloat16)
+          + oh * k.astype(jnp.bfloat16)).astype(kt)
+    vc = (cache["v"].astype(jnp.bfloat16)
+          + oh * v.astype(jnp.bfloat16)).astype(kt)
+
+    ki = jnp.arange(s_max, dtype=jnp.int32)[None, :]
+    ok = (ki <= pos[:, None]) & ((jnp.asarray(window) <= 0)
+                                 | (ki > pos[:, None] - window))
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)      # [B, S]
+
+    h = cfg.n_heads
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.bfloat16),
+                        kc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32) + mask[:, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(jnp.bfloat16),
+                   vc.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * dh).astype(x.dtype)
+    y = o @ cast(p["wo"], cfg.compute_dtype)
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA (minicpm3): latent-compressed KV, decoupled rope head
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qd = qk_nope + qk_rope
+    ks = jax.random.split(key, 8)
+    p = {
+        "wdq": dense_init(ks[0], d, cfg.q_lora_rank, cfg.param_dtype),
+        "q_ln": jnp.ones((cfg.q_lora_rank,), cfg.param_dtype),
+        "wuq": dense_init(ks[1], cfg.q_lora_rank, h * qd, cfg.param_dtype),
+        "wdkv": dense_init(ks[2], d, cfg.kv_lora_rank, cfg.param_dtype),
+        "kv_ln": jnp.ones((cfg.kv_lora_rank,), cfg.param_dtype),
+        "wuk": dense_init(ks[3], cfg.kv_lora_rank, h * qk_nope, cfg.param_dtype),
+        "wuv": dense_init(ks[4], cfg.kv_lora_rank, h * dv, cfg.param_dtype),
+        "wkr": dense_init(ks[5], d, qk_rope, cfg.param_dtype),
+        "wo": dense_init(ks[6], h * dv, d, cfg.param_dtype),
+    }
+    return p
+
+
+def _mla_qckv(p, cfg, x):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_nope, qk_rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    ct = cfg.compute_dtype
+    cq = rms_norm(x @ cast(p["wdq"], ct), p["q_ln"], cfg.norm_eps)
+    q = (cq @ cast(p["wuq"], ct)).reshape(b, s, h, qk_nope + qk_rope)
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    ckv = rms_norm(x @ cast(p["wdkv"], ct), p["kv_ln"], cfg.norm_eps)  # [B,S,r]
+    kpe = x @ cast(p["wkr"], ct)                                       # [B,S,rope]
+    return q_nope, q_pe, ckv, kpe
+
+
+def _mla_attend(p, cfg, q_nope, q_pe, ckv, kpe, mask):
+    """q_*: [B,Sq,H,*]; ckv: [B,Sk,r]; kpe: [B,Sk,rope] (rope pre-applied)."""
+    b, sq, h, _ = q_nope.shape
+    qk_nope, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    ct = cfg.compute_dtype
+    ckv = ckv.astype(jnp.dtype(ct))
+    k_nope = (ckv @ cast(p["wuk"], ct)).reshape(b, -1, h, qk_nope)
+    v = (ckv @ cast(p["wuv"], ct)).reshape(b, -1, h, dv)
+    scale = 1.0 / jnp.sqrt(qk_nope + cfg.qk_rope_dim).astype(jnp.float32)
+    s_n = jnp.einsum("bqhd,bshd->bqhs", q_nope.astype(jnp.bfloat16),
+                     k_nope.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+    s_p = jnp.einsum("bqhd,bsd->bqhs", q_pe.astype(jnp.bfloat16),
+                     kpe.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+    scores = (s_n + s_p) * scale + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqhs,bshd->bqhd", w.astype(jnp.bfloat16),
+                   v.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+    y = o.reshape(b, sq, h * dv).astype(jnp.dtype(ct))
+    return y @ cast(p["wo"], ct)
+
+
+_MLA_BLOCK_Q = 512
+
+
+def _mla_attend_causal(p, cfg, q_nope, q_pe, ckv, kpe, window):
+    """Chunked-over-q causal MLA (scores never exceed [B, bq, H, Sk])."""
+    b, s, h, _ = q_nope.shape
+    if s <= min(_MLA_BLOCK_Q, cfg.attn_block_q) or s <= cfg.attn_block_q:
+        mask = causal_mask(s, s, window=window)[None, :, None, :]
+        return _mla_attend(p, cfg, q_nope, q_pe, ckv, kpe, mask)
+    bq = min(_MLA_BLOCK_Q, cfg.attn_block_q)
+    assert s % bq == 0
+    nb = s // bq
+    qn = q_nope.reshape(b, nb, bq, h, -1).transpose(1, 0, 2, 3, 4)
+    qp = q_pe.reshape(b, nb, bq, h, -1).transpose(1, 0, 2, 3, 4)
+
+    def one(carry, inp):
+        i, qni, qpi = inp
+        mask = causal_mask(bq, s, q_offset=i * bq, window=window
+                           )[None, :, None, :]
+        y = _mla_attend(p, cfg, qni, qpi, ckv, kpe, mask)
+        return carry, y
+
+    _, yb = jax.lax.scan(one, 0, (jnp.arange(nb), qn, qp))
+    return yb.transpose(1, 0, 2, 3).reshape(b, s, -1)
+
+
+def mla_forward(p, cfg, x, positions, window: int = 0):
+    b, s, _ = x.shape
+    q_nope, q_pe, ckv, kpe = _mla_qckv(p, cfg, x)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return _mla_attend_causal(p, cfg, q_nope, q_pe, ckv, kpe, window)
+
+
+def mla_prefill(p, cfg, x, positions, cache_len: int, window: int = 0):
+    b, s, _ = x.shape
+    q_nope, q_pe, ckv, kpe = _mla_qckv(p, cfg, x)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    y = _mla_attend_causal(p, cfg, q_nope, q_pe, ckv, kpe, window)
+    pad = cache_len - s
+    kt = jnp.dtype(cfg.kv_cache_dtype)
+    return y, {"ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))).astype(kt),
+               "kpe": jnp.pad(kpe, ((0, 0), (0, pad), (0, 0))).astype(kt)}
+
+
+def mla_decode(p, cfg, x, pos, cache, window: int = 0):
+    """The MLA decode win: the cache is the latent (r + rope) per token —
+    5-10x smaller than GQA's — re-expanded per step."""
+    b, _, _ = x.shape
+    q_nope, q_pe, ckv_new, kpe_new = _mla_qckv(p, cfg, x)
+    q_pe = apply_rope(q_pe, pos[:, None], cfg.rope_theta)
+    kpe_new = apply_rope(kpe_new[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0, :]
+    s_max = cache["ckv"].shape[1]
+    kt = cache["ckv"].dtype
+    oh = jax.nn.one_hot(pos, s_max, dtype=jnp.bfloat16)[:, :, None]
+    ckv = (cache["ckv"].astype(jnp.bfloat16)
+           + oh * ckv_new.astype(jnp.bfloat16)).astype(kt)
+    kpe = (cache["kpe"].astype(jnp.bfloat16)
+           + oh * kpe_new.astype(jnp.bfloat16)).astype(kt)
+    ki = jnp.arange(s_max, dtype=jnp.int32)[None, :]
+    ok = (ki <= pos[:, None]) & ((jnp.asarray(window) <= 0)
+                                 | (ki > pos[:, None] - window))
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[:, None, None, :]
+    y = _mla_attend(p, cfg, q_nope, q_pe, ckv, kpe, mask)
+    return y, {"ckv": ckv, "kpe": kpe}

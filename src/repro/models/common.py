@@ -1,0 +1,182 @@
+"""Shared model components: norms, rotary embeddings, init, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cast(x, dtype_str: str):
+    return x.astype(jnp.dtype(dtype_str))
+
+
+def dense_init(key, d_in: int, d_out: int, dtype="float32", scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, n: int, d: int, dtype="float32"):
+    return (jax.random.normal(key, (n, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh] (or [..., H, Dh] with scalar pos), half-dim rotation."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0, window=0):
+    """[s_q, s_k] additive mask; window > 0 = sliding-window attention.
+    `window` may be a traced scalar (hymba mixes global/window per layer)."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    ok = (ki <= qi) & ((jnp.asarray(window) <= 0) | (ki > qi - window))
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+ATTEND_BLOCK_Q = 512
+
+
+def attend_causal(q, k, v, window=0, compute_dtype="bfloat16",
+                  block_q: int = ATTEND_BLOCK_Q, impl: str = "xla",
+                  q_offset: int = 0):
+    """Causal (optionally windowed) attention.
+
+    impl="xla":       chunked over query blocks — scores materialize as
+                      [B, block_q, H, Sk] per chunk (baseline dry-run path).
+    impl="xla_flash": the full flash algorithm in XLA — a kv-block inner
+                      scan with online-softmax carry; no [.., Sk]-wide score
+                      tensor ever reaches HBM (the §Perf memory-term lever;
+                      kernels/flash_attention is the true TPU kernel).
+
+    q: [B,Sq,H,Dh]; k/v: [B,Sk,Hkv,Dh] -> [B,Sq,H,Dh].
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if impl == "xla_flash":
+        return _attend_flash_xla(q, k, v, window, compute_dtype, block_q,
+                                 q_offset)
+    if sq <= block_q:
+        return softmax_attend(q, k, v,
+                              causal_mask(sq, sk, q_offset=q_offset,
+                                          window=window), compute_dtype)
+    assert sq % block_q == 0
+    nb = sq // block_q
+    qb = q.reshape(b, nb, block_q, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def one(carry, inp):
+        i, qi = inp
+        qg = qi.reshape(b, block_q, hkv, g, dh)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.bfloat16),
+                       k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(dh).astype(jnp.float32)
+        qi_idx = q_offset + i * block_q + jnp.arange(block_q)[:, None]
+        ki_idx = jnp.arange(sk)[None, :]
+        ok = (ki_idx <= qi_idx) & ((jnp.asarray(window) <= 0)
+                                   | (ki_idx > qi_idx - window))
+        s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", w.astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        return carry, o.reshape(b, block_q, h, dh).astype(jnp.dtype(compute_dtype))
+
+    _, ob = jax.lax.scan(one, 0, (jnp.arange(nb), qb))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def _attend_flash_xla(q, k, v, window, compute_dtype, block: int,
+                      q_offset: int = 0):
+    """Online-softmax double loop in pure XLA (scan over kv blocks inside a
+    scan over q blocks). Causal block skip via where on the carry."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(block, sq)
+    bk = min(block, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nq, nk = sq // bq, sk // bk
+    qb = q.reshape(b, nq, bq, h, dh).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(b, nk, bk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, bk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    def q_step(_, qin):
+        i, qi = qin
+        qg = qi.reshape(b, bq, hkv, g, dh).astype(jnp.bfloat16)
+
+        def kv_step(carry, kin):
+            j, kj, vj = kin
+            m, l, acc = carry
+            live = j * bk <= q_offset + i * bq + bq - 1  # causal relevance
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kj.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32) * scale
+            qi_idx = q_offset + i * bq + jnp.arange(bq)[:, None]
+            ki_idx = j * bk + jnp.arange(bk)[None, :]
+            ok = (ki_idx <= qi_idx) & ((jnp.asarray(window) <= 0)
+                                       | (ki_idx > qi_idx - window))
+            s = jnp.where(ok[None, :, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bqkgs,bskd->bqkgd", p.astype(jnp.bfloat16),
+                                    vj.astype(jnp.bfloat16),
+                                    preferred_element_type=jnp.float32))
+            keep = live
+            m = jnp.where(keep, m_new, m)
+            l = jnp.where(keep, l_new, l)
+            acc = jnp.where(keep, acc_new, acc)
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, bq, hkv, g), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, bq, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, bq, hkv, g, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, o.reshape(b, bq, h, dh).astype(jnp.dtype(compute_dtype))
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def softmax_attend(q, k, v, mask, compute_dtype="bfloat16"):
+    """q:[B,Sq,H,Dh] k/v:[B,Sk,Hkv,Dh] -> [B,Sq,H,Dh]; GQA broadcast of kv.
+
+    Scores accumulate in f32 (MXU-friendly bf16 inputs, f32 accumulation).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.bfloat16),
+                        k.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    scores = scores + mask[None, :, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", w.astype(jnp.bfloat16),
+                     v.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(jnp.dtype(compute_dtype))

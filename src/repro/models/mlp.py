@@ -1,0 +1,22 @@
+"""SwiGLU MLP (all assigned dense archs use gated MLPs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cast, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype="float32"):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),   # gate
+        "wu": dense_init(ks[1], d_model, d_ff, dtype),   # up
+        "wd": dense_init(ks[2], d_ff, d_model, dtype),   # down
+    }
+
+
+def mlp(p, x, compute_dtype="bfloat16"):
+    g = x @ cast(p["wi"], compute_dtype)
+    u = x @ cast(p["wu"], compute_dtype)
+    return (jax.nn.silu(g) * u) @ cast(p["wd"], compute_dtype)

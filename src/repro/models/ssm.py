@@ -1,0 +1,336 @@
+"""Recurrent sequence mixers: selective SSM (mamba-style, for hymba) and
+xLSTM cells (mLSTM matrix memory + sLSTM scalar memory).
+
+Training uses parallel forms (associative scan / quadratic-with-decay), decode
+uses O(1) recurrent state updates — the reason these archs run the long_500k
+cell that full-attention archs must skip (DESIGN.md §5).
+
+State conventions (per layer):
+  mamba: {"conv": [B, K-1, d_inner], "ssm": [B, d_inner, d_state]}
+  mlstm: {"c": [B, H, dk, dv], "n": [B, H, dk], "m": [B, H]}
+  slstm: {"c": [B, d], "n": [B, d], "h": [B, d], "m": [B, d]}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cast, dense_init
+
+
+# ---------------------------------------------------------------------------
+# selective SSM (mamba-style)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.1).astype(cfg.param_dtype),
+        "x_proj": dense_init(ks[2], di, 1 + 2 * n, cfg.param_dtype),  # dt, B, C
+        "a_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[3], di, d, cfg.param_dtype),
+    }
+
+
+def _mamba_core(p, cfg, xz, conv_state):
+    """xz: [B, S, 2*di] post in_proj; returns (x_conv, z, new_conv_state)."""
+    di = xz.shape[-1] // 2
+    x, z = xz[..., :di], xz[..., di:]
+    k = cfg.ssm_conv
+    xp = jnp.concatenate([conv_state, x], axis=1)        # [B, K-1+S, di]
+    # causal depthwise conv, kernel K
+    w = cast(p["conv_w"], cfg.compute_dtype)
+    xc = sum(xp[:, i: xp.shape[1] - (k - 1 - i), :] * w[i] for i in range(k))
+    xc = jax.nn.silu(xc)
+    new_conv = xp[:, -(k - 1):, :]
+    return xc, z, new_conv
+
+
+MAMBA_CHUNK = 256
+
+
+def mamba_forward(p, cfg, x, state=None, chunk: int | None = None):
+    """x: [B, S, D] -> (y, new_state). Chunked parallel scan: the [B,L,di,n]
+    hidden tensor exists for one chunk at a time (L = chunk) — the memory
+    shape real selective-scan kernels use."""
+    b, s, d = x.shape
+    if chunk is None:
+        chunk = getattr(cfg, "scan_chunk", MAMBA_CHUNK)
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ct = cfg.compute_dtype
+    if state is None:
+        state = {"conv": jnp.zeros((b, cfg.ssm_conv - 1, di), jnp.dtype(ct)),
+                 "ssm": jnp.zeros((b, di, n), jnp.float32)}
+    xz = x @ cast(p["in_proj"], ct)
+    xc, z, new_conv = _mamba_core(p, cfg, xz, state["conv"])
+    dbc = xc @ cast(p["x_proj"], ct)                      # [B,S,1+2n]
+    dt = jax.nn.softplus(dbc[..., :1].astype(jnp.float32))       # [B,S,1]
+    bmat = dbc[..., 1:1 + n].astype(jnp.float32)                 # [B,S,n]
+    cmat = dbc[..., 1 + n:].astype(jnp.float32)                  # [B,S,n]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # [di,n]
+
+    L = min(chunk, s)
+    pad = (-s) % L
+    nc = (s + pad) // L
+
+    def chunks(arr, fill=0.0):
+        arr = jnp.pad(arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2),
+                      constant_values=fill)
+        return arr.reshape((b, nc, L) + arr.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, arr.ndim + 1)))
+
+    dt_c = chunks(dt)
+    b_c = chunks(bmat)
+    xc_c = chunks(xc.astype(jnp.float32))
+    c_c = chunks(cmat)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    sdt = jnp.dtype(getattr(cfg, "ssm_scan_dtype", "float32"))
+
+    def one(h0, inp):
+        dtj, bj, xj, cj = inp
+        da = jnp.exp(dtj[..., None] * a[None, None])             # [B,L,di,n]
+        dbx = dtj[..., None] * bj[:, :, None, :] * xj[..., None]
+        aa = jnp.concatenate([jnp.ones((b, 1, di, n), sdt),
+                              da.astype(sdt)], 1)
+        bb = jnp.concatenate([h0[:, None].astype(sdt), dbx.astype(sdt)], 1)
+        _, hs = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+        yj = jnp.einsum("bldn,bln->bld", hs[:, 1:].astype(jnp.float32), cj)
+        return hs[:, -1].astype(jnp.float32), yj
+
+    h_last, y_c = jax.lax.scan(one, state["ssm"], (dt_c, b_c, xc_c, c_c))
+    y = y_c.transpose(1, 0, 2, 3).reshape(b, nc * L, di)[:, :s]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.dtype(ct))
+    new_state = {"conv": new_conv, "ssm": h_last}
+    return y @ cast(p["out_proj"], ct), new_state
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-token step, O(1) in context length."""
+    y, new_state = mamba_forward(p, cfg, x, state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    di = cfg.ssm_expand * d            # up-projected width
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, cfg.param_dtype),      # x, gate
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.1).astype(cfg.param_dtype),
+        "wq": dense_init(ks[2], di, di, cfg.param_dtype),
+        "wk": dense_init(ks[3], di, di, cfg.param_dtype),
+        "wv": dense_init(ks[4], di, di, cfg.param_dtype),
+        "wif": dense_init(ks[5], di, 2 * h, cfg.param_dtype),     # i, f gates
+        "ln": jnp.ones((di,), cfg.param_dtype),
+        "down": dense_init(ks[6], di, d, cfg.param_dtype),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_forward(p, cfg, x, state=None, chunk: int | None = None):
+    """Chunkwise-parallel mLSTM: O(S·L) memory (L = chunk), quadratic only
+    inside a chunk; the inter-chunk recurrence carries the stabilized matrix
+    memory (C, n, m) — the same state decode uses. Returns (y, new_state)."""
+    b, s, d = x.shape
+    if chunk is None:
+        chunk = getattr(cfg, "scan_chunk", MLSTM_CHUNK)
+    h = cfg.n_heads
+    di = cfg.ssm_expand * d
+    dh = di // h
+    ct = cfg.compute_dtype
+    if state is None:
+        state = mlstm_init_state(cfg, b)
+    xu = x @ cast(p["up"], ct)
+    xm, z = xu[..., :di], xu[..., di:]
+    k_ = cfg.ssm_conv
+    xp = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+    w = cast(p["conv_w"], ct)
+    xc = sum(xp[:, i: xp.shape[1] - (k_ - 1 - i), :] * w[i] for i in range(k_))
+    xc = jax.nn.silu(xc)
+    new_conv = xp[:, -(k_ - 1):, :]
+
+    q = (xc @ cast(p["wq"], ct)).reshape(b, s, h, dh)
+    kk = (xc @ cast(p["wk"], ct)).reshape(b, s, h, dh) / jnp.sqrt(dh)
+    v = (xm @ cast(p["wv"], ct)).reshape(b, s, h, dh)
+    gif = (xc @ cast(p["wif"], ct)).astype(jnp.float32)
+    log_i = gif[..., :h]                                   # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gif[..., h:])               # [B,S,H]
+
+    L = min(chunk, s)
+    pad = (-s) % L
+    nc = (s + pad) // L
+
+    def pad_chunks(a, fill=0.0):
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=fill)
+        return a.reshape((b, nc, L) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))       # [NC, B, L, ...]
+
+    qc = pad_chunks(q.astype(jnp.float32))
+    kc = pad_chunks(kk.astype(jnp.float32))
+    vc = pad_chunks(v.astype(jnp.float32))
+    lic = pad_chunks(log_i, fill=-1e30)                    # pad never writes
+    lfc = pad_chunks(log_f, fill=0.0)                      # pad never decays
+
+    def step(carry, inp):
+        C, n, m_c = carry                                  # [B,H,dk,dv],[B,H,dk],[B,H]
+        qj, kj, vj, lij, lfj = inp                         # [B,L,...]
+        cf = jnp.cumsum(lfj, axis=1)                       # [B,L,H]
+        # intra-chunk decay D_ts = cf_t - cf_s + li_s (causal)
+        Dm = cf[:, :, None, :] - cf[:, None, :, :] + lij[:, None, :, :]
+        ti = jnp.arange(L)
+        Dm = jnp.where((ti[None, :, None] >= ti[None, None, :])[..., None],
+                       Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=2)                      # [B,L,H]
+        b_t = cf + m_c[:, None, :]                         # carry path decay
+        m_t = jnp.maximum(m_intra, b_t)                    # [B,L,H]
+        dexp = jnp.exp(Dm - m_t[:, :, None, :])
+        scores = jnp.einsum("blhd,bshd->blsh", qj, kj) * dexp
+        num = jnp.einsum("blsh,bshd->blhd", scores, vj)
+        den = jnp.sum(scores, axis=2)                      # [B,L,H]
+        cfac = jnp.exp(b_t - m_t)                          # [B,L,H]
+        num = num + jnp.einsum("blhd,bhde->blhe", qj, C) * cfac[..., None]
+        den = den + jnp.einsum("blhd,bhd->blh", qj, n) * cfac
+        yj = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # fold chunk into state
+        cfL = cf[:, -1]                                    # [B,H]
+        dk_s = cfL[:, None, :] - cf + lij                  # [B,L,H]
+        m_next = jnp.maximum(cfL + m_c, jnp.max(dk_s, axis=1))
+        sfac = jnp.exp(dk_s - m_next[:, None, :])
+        C2 = (C * jnp.exp(cfL + m_c - m_next)[..., None, None]
+              + jnp.einsum("blh,blhd,blhe->bhde", sfac, kj, vj))
+        n2 = (n * jnp.exp(cfL + m_c - m_next)[..., None]
+              + jnp.einsum("blh,blhd->bhd", sfac, kj))
+        return (C2, n2, m_next), yj
+
+    carry0 = (state["c"], state["n"], state["m"])
+    (C, n, m_c), ys = jax.lax.scan(step, carry0, (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * L, di)[:, :s]
+    y = y.astype(jnp.dtype(ct)) * jax.nn.silu(z) * cast(p["ln"], ct)
+    new_state = {"conv": new_conv, "c": C, "n": n, "m": m_c}
+    return y @ cast(p["down"], ct), new_state
+
+
+def mlstm_init_state(cfg, b):
+    h = cfg.n_heads
+    di = cfg.ssm_expand * cfg.d_model
+    dh = di // h
+    return {"conv": jnp.zeros((b, cfg.ssm_conv - 1, di), jnp.dtype(cfg.compute_dtype)),
+            "c": jnp.zeros((b, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, h, dh), jnp.float32),
+            "m": jnp.zeros((b, h), jnp.float32)}
+
+
+def mlstm_decode(p, cfg, x, state):
+    """O(1) recurrent step: C_t = f C_{t-1} + i v k^T (stabilized)."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm_expand * d
+    dh = di // h
+    ct = cfg.compute_dtype
+    xu = x @ cast(p["up"], ct)
+    xm, z = xu[..., :di], xu[..., di:]
+    k_ = cfg.ssm_conv
+    xp = jnp.concatenate([state["conv"], xm], axis=1)       # [B, K, di]
+    w = cast(p["conv_w"], ct)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", xp, w))[:, None, :]
+    q = (xc @ cast(p["wq"], ct)).reshape(b, h, dh)
+    kk = (xc @ cast(p["wk"], ct)).reshape(b, h, dh) / jnp.sqrt(dh)
+    v = (xm @ cast(p["wv"], ct)).reshape(b, h, dh)
+    gif = (xc @ cast(p["wif"], ct)).astype(jnp.float32).reshape(b, 2 * h)
+    log_i, log_f = gif[:, :h], jax.nn.log_sigmoid(gif[:, h:])
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    fdec = jnp.exp(state["m"] + log_f - m_new)[..., None]
+    iexp = jnp.exp(log_i - m_new)[..., None]
+    c = state["c"] * fdec[..., None] + iexp[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", kk.astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * fdec + iexp * kk.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(b, 1, di).astype(jnp.dtype(ct))
+    y = y * jax.nn.silu(z) * cast(p["ln"], ct)
+    new_state = {"conv": xp[:, 1:], "c": c, "n": n, "m": m_new}
+    return y @ cast(p["down"], ct), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence -> lax.scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, cfg.param_dtype),    # z i f o
+        "wh": dense_init(ks[1], d, 4 * d, cfg.param_dtype,
+                         scale=0.5 / jnp.sqrt(d)),
+        "b": jnp.zeros((4 * d,), cfg.param_dtype),
+        "out": dense_init(ks[2], d, d, cfg.param_dtype),
+    }
+
+
+def slstm_init_state(cfg, b):
+    d = cfg.d_model
+    z = jnp.zeros((b, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_step(p, cfg, carry, xt):
+    c, n, hprev, m = carry
+    d = cfg.d_model
+    pre = (xt.astype(jnp.float32) @ p["wx"].astype(jnp.float32)
+           + hprev @ p["wh"].astype(jnp.float32) + p["b"].astype(jnp.float32))
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i)
+    ie = jnp.exp(i - m_new)
+    fe = jnp.exp(log_f + m - m_new)
+    c2 = fe * c + ie * z
+    n2 = fe * n + ie
+    h2 = o * c2 / jnp.maximum(n2, 1.0)
+    return (c2, n2, h2, m_new), h2
+
+
+def slstm_forward(p, cfg, x, state=None):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, ys = jax.lax.scan(lambda c, xt: _slstm_step(p, cfg, c, xt),
+                             carry, x.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y @ cast(p["out"], cfg.compute_dtype), new_state
+
+
+def slstm_decode(p, cfg, x, state):
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, y = _slstm_step(p, cfg, carry, x[:, 0, :])
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return (y[:, None, :].astype(x.dtype)) @ cast(p["out"], cfg.compute_dtype), new_state

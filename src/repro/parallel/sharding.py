@@ -1,0 +1,119 @@
+"""Mesh context + sharding rules (DP / FSDP / TP / EP / SP).
+
+The mesh context lets model internals (MoE dispatch, sharded decode
+attention) open nested shard_map regions over the model axis while the rest
+of the program stays under GSPMD auto-sharding — pjit outside, manual
+collectives exactly where the paper's routing lives.
+
+Param sharding rules (2D "fsdp x tp", MaxText-style):
+  embed/lm_head [V, D]   -> P(tp, fsdp)
+  attn in  [D, H*dh]     -> P(fsdp, tp)
+  attn out [H*dh, D]     -> P(tp, fsdp)
+  mlp in   [D, F]        -> P(fsdp, tp)   mlp out [F, D] -> P(tp, fsdp)
+  experts  [E, D, F]     -> P(ep, fsdp, tp_inner) (EP over the model axis)
+  scalars/norms          -> replicated
+Dims that do not divide their axis fall back to replication on that dim
+(heads that don't divide 16, etc.) — recorded per-arch by the dry-run.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, dp_axes=("data",), tp_axis="model", pp_axis=None):
+    prev = getattr(_ctx, "cfg", None)
+    _ctx.cfg = {"mesh": mesh, "dp_axes": tuple(dp_axes), "tp_axis": tp_axis,
+                "pp_axis": pp_axis}
+    try:
+        yield
+    finally:
+        _ctx.cfg = prev
+
+
+def current_mesh():
+    cfg = getattr(_ctx, "cfg", None)
+    return cfg["mesh"] if cfg else None
+
+
+def mesh_cfg():
+    return getattr(_ctx, "cfg", None)
+
+
+def _divides(dim: int, axes, mesh: Mesh) -> bool:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _maybe(axis, dim, mesh):
+    """axis if it divides dim else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if _divides(dim, axis, mesh) else None
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, dp_axes=("data",),
+               tp_axis="model") -> P:
+    """Sharding rule by parameter path suffix + shape."""
+    fsdp = tuple(dp_axes)  # ZeRO-3-style: shard the non-TP dim over data
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    if name == "embed":
+        # vocab-parallel embedding, D replicated (2D-sharded embed gathers
+        # trip XLA:CPU SPMD — and Megatron-style vocab-parallel is the
+        # production layout anyway)
+        return P(_maybe(tp_axis, shape[0], mesh), None)
+    if name == "lm_head":
+        return P(None, _maybe(tp_axis, shape[-1], mesh))
+    if name in ("wo", "wd", "down", "out_proj", "out"):
+        # [big_in, D]: first dim tp, second fsdp
+        return P(_maybe(tp_axis, shape[0], mesh),
+                 fsdp if _divides(shape[1], fsdp, mesh) else None)
+    if name in ("wi", "wu", "wq", "wk", "wv", "wx", "wh", "up", "in_proj",
+                "x_proj", "wdq", "wuq", "wdkv", "wuk", "wuv", "wkr", "router"):
+        if nd == 3:  # experts [E, D, F] — EP over model; ZeRO shard on the
+            # LAST dim (F) over data: D-dim sharding trips XLA:CPU SPMD
+            # resharding in the scanned backward (llama4 16x16 cell)
+            return P(_maybe(tp_axis, shape[0], mesh), None,
+                     fsdp if _divides(shape[2], fsdp, mesh) else None)
+        return P(fsdp if _divides(shape[0], fsdp, mesh) else None,
+                 _maybe(tp_axis, shape[1], mesh))
+    if nd == 3:  # stacked experts default
+        return P(_maybe(tp_axis, shape[0], mesh), None, None)
+    return P(fsdp if _divides(shape[0], fsdp, mesh) else None, None)
+
+
+def params_shardings(params, mesh: Mesh, dp_axes=("data",), tp_axis="model"):
+    """NamedSharding pytree for a param tree. Leading scan-stack dims (added
+    by the layer scan) are detected by path containing 'blocks' and skipped."""
+    def spec_for(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_elems)
+        shape = leaf.shape
+        stacked = "blocks" in path
+        if stacked and len(shape) >= 1:
+            inner = shape[1:]
+            sp = param_spec(path, inner, mesh, dp_axes, tp_axis)
+            return NamedSharding(mesh, P(None, *sp))
+        return NamedSharding(mesh, param_spec(path, shape, mesh, dp_axes, tp_axis))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def constrain(x, spec: P):
+    """Sharding-constraint hint if a mesh context is active, else no-op."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

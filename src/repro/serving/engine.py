@@ -1,0 +1,242 @@
+"""Continuous-batching serving engine — the paper's structures as substrate.
+
+Host loop (like every production engine) around jitted device steps:
+
+  arrivals -> §III ring queue -> §II skiplist priority index -> admit into
+  free slots -> prefill writes §V pool pages (+ §VII prefix-cache sharing)
+  -> decode batch via paged attention -> finished requests recycle pages.
+
+Admission is capacity-aware: a request only admits if the pool can cover its
+pages (allocation failure = stay queued — the paper's retry semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.serving import kvcache as KV
+from repro.serving import prefix_cache as PC
+from repro.serving import scheduler as SCH
+from repro.serving.paged_decode import paged_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray
+    max_new: int
+    priority: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_reqs: int = 8, num_pages: int = 64,
+                 page_size: int = 16, max_pages_per_req: int = 16,
+                 use_kernel: bool = False, use_prefix_cache: bool = True):
+        assert cfg.attn_type == "gqa" and cfg.block_pattern == "transformer"
+        self.cfg = cfg
+        self.params = params
+        self.kv = KV.paged_kv_init(cfg, num_pages=num_pages, page_size=page_size,
+                                   max_reqs=max_reqs,
+                                   max_pages_per_req=max_pages_per_req)
+        self.sched = SCH.scheduler_init(max_pending=1024)
+        self.pc = PC.prefix_cache_init() if use_prefix_cache else None
+        self.max_reqs = max_reqs
+        self.requests: dict[int, Request] = {}
+        self.slot_to_req = [-1] * max_reqs
+        self._decode = jax.jit(
+            lambda p, t, s, kv, m: paged_decode_step(p, cfg, t, s, kv, m,
+                                                     use_kernel=use_kernel))
+        self._prefill = {}
+        self.steps = 0
+        self.prefix_hits = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.requests[req.req_id] = req
+        self.sched, ok = SCH.submit(
+            self.sched, jnp.asarray([req.priority], jnp.uint32),
+            jnp.asarray([req.req_id], jnp.int32), jnp.ones((1,), bool))
+        assert bool(ok[0])
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_to_req) if r < 0]
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill:
+            cfg = self.cfg
+
+            def fn(params, tokens):
+                logits, caches, _ = M.prefill(params, cfg, tokens, cache_len=plen)
+                kv_per_layer = caches[0]          # single-kind transformer
+                return logits[:, -1], kv_per_layer["k"], kv_per_layer["v"]
+
+            self._prefill[plen] = jax.jit(fn)
+        return self._prefill[plen]
+
+    def _prefill_past_fn(self, s_past: int, s_suf: int):
+        key = ("past", s_past, s_suf)
+        if key not in self._prefill:
+            cfg = self.cfg
+
+            def fn(params, tokens, past_k, past_v):
+                logits, caches, _ = M.prefill_with_past(
+                    params, cfg, tokens, past_k, past_v,
+                    cache_len=s_past + s_suf)
+                kvl = caches[0]
+                return logits[:, -1], kvl["k"], kvl["v"]
+
+            self._prefill[key] = jax.jit(fn)
+        return self._prefill[key]
+
+    def _page_keys(self, prompt):
+        """Chained hashes of the prompt's FULL pages (prefix identity)."""
+        page = self.kv.page_size
+        n_full = len(prompt) // page
+        keys = []
+        prev = jnp.zeros((1,), jnp.uint64)
+        for j in range(n_full):
+            blk = jnp.asarray(prompt[j * page:(j + 1) * page], jnp.int32)[None]
+            prev = PC.block_key(blk, prev)
+            keys.append(int(prev[0]))
+        return keys
+
+    def _admit(self):
+        free = self._free_slots()
+        if not free:
+            return
+        k = min(len(free), 4)
+        self.sched, rids, valid = SCH.pop_min(self.sched, k)
+        rids = np.asarray(rids)
+        valid = np.asarray(valid)
+        for j in range(k):
+            if not valid[j]:
+                continue
+            req = self.requests[int(rids[j])]
+            slot = free.pop(0) if free else -1
+            if slot < 0:
+                self.submit(req)                  # back to the queue
+                continue
+            plen = len(req.prompt)
+            page = self.kv.page_size
+            mp = self.kv.max_pages_per_req
+
+            # --- prefix-cache probe: leading full pages already resident? ---
+            pkeys = self._page_keys(req.prompt) if self.pc is not None else []
+            n_hit = 0
+            hit_ids = []
+            if pkeys:
+                self.pc, pids, fresh = PC.lookup(
+                    self.pc, self.kv.pool, jnp.asarray(pkeys, jnp.uint64))
+                for pid, f in zip(np.asarray(pids), np.asarray(fresh)):
+                    if not f:
+                        break
+                    n_hit += 1
+                    hit_ids.append(int(pid))
+                # always keep >= 1 suffix token to prefill (the model needs
+                # a query to produce the next-token logits)
+                while n_hit and n_hit * page >= plen:
+                    n_hit -= 1
+                    hit_ids.pop()
+
+            shared = np.full((1, mp), -1, np.int32)
+            shared[0, :n_hit] = hit_ids
+            kv2, ok = KV.admit_requests(
+                self.kv, jnp.asarray([slot], jnp.int32),
+                jnp.asarray([plen], jnp.int32), jnp.ones((1,), bool),
+                shared_pages=jnp.asarray(shared),
+                n_shared=jnp.asarray([n_hit], jnp.int32))
+            if not bool(ok[0]):                   # pool exhausted: stay queued
+                self.submit(req)
+                continue
+            self.kv = kv2
+            if n_hit:
+                # gather past KV from the shared pages; prefill the suffix
+                ids = jnp.asarray(hit_ids, jnp.int32)
+                past_k = self.kv.k[:, ids].reshape(
+                    self.kv.k.shape[0], 1, n_hit * page, *self.kv.k.shape[3:])
+                past_v = self.kv.v[:, ids].reshape(
+                    self.kv.v.shape[0], 1, n_hit * page, *self.kv.v.shape[3:])
+                suf = jnp.asarray(req.prompt[n_hit * page:], jnp.int32)[None]
+                # model expects past as [ng, B, S, Hkv, Dh]
+                pk = past_k.transpose(0, 1, 2, 3, 4)
+                logits, klay, vlay = self._prefill_past_fn(
+                    n_hit * page, plen - n_hit * page)(
+                    self.params, suf, past_k, past_v)
+                # caches cover past+suffix; write only the suffix pages
+                kl = klay[:, 0, n_hit * page:]
+                vl = vlay[:, 0, n_hit * page:]
+                self.kv = KV.write_prefill(self.kv, slot, kl, vl,
+                                           start_page=n_hit)
+                self.prefix_hits += n_hit
+            else:
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, klay, vlay = self._prefill_fn(plen)(self.params, toks)
+                # klay: [n_groups, B, S, Hkv, Dh] -> [L, S, Hkv, Dh]
+                kl = klay[:, 0]
+                vl = vlay[:, 0]
+                self.kv = KV.write_prefill(self.kv, slot, kl, vl)
+            # publish this prompt's full pages for future prefix reuse
+            if self.pc is not None and pkeys:
+                bt = np.asarray(self.kv.block_tables[slot])
+                n_pub = min(len(pkeys), mp)
+                ids = bt[:n_pub]
+                gens = np.asarray(self.kv.pool.gen)[np.maximum(ids, 0)]
+                handles = (gens.astype(np.uint64) << np.uint64(32)) \
+                    | ids.astype(np.uint64)
+                self.pc = PC.insert(self.pc, jnp.asarray(pkeys[:n_pub],
+                                                         jnp.uint64),
+                                    jnp.asarray(handles),
+                                    jnp.asarray(ids >= 0))
+            nxt = int(jnp.argmax(logits[0]))
+            req.out.append(nxt)
+            req.slot = slot
+            self.slot_to_req[slot] = req.req_id
+
+    def _active_slots(self):
+        return [i for i, r in enumerate(self.slot_to_req) if r >= 0]
+
+    def step(self):
+        """One engine iteration: admit, decode one token for every active
+        request, retire finished ones."""
+        self._admit()
+        active = self._active_slots()
+        if not active:
+            return 0
+        slots = jnp.asarray(
+            active + [0] * (self.max_reqs - len(active)), jnp.int32)
+        mask = jnp.asarray([True] * len(active)
+                           + [False] * (self.max_reqs - len(active)))
+        self.kv, ok = KV.grow_for_decode(self.kv, slots, mask)
+        toks = [self.requests[self.slot_to_req[s]].out[-1] for s in active]
+        toks = jnp.asarray(toks + [0] * (self.max_reqs - len(active)),
+                           jnp.int32)[:, None]
+        logits, self.kv = self._decode(self.params, toks, slots, self.kv, mask)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done_slots = []
+        for i, s in enumerate(active):
+            req = self.requests[self.slot_to_req[s]]
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                done_slots.append(s)
+        if done_slots:
+            ds = jnp.asarray(done_slots, jnp.int32)
+            self.kv = KV.release_requests(self.kv, ds,
+                                          jnp.ones((len(done_slots),), bool))
+            for s in done_slots:
+                self.slot_to_req[s] = -1
+        self.steps += 1
+        return len(active)
+
+    def run(self, max_steps: int = 256):
+        while (any(not r.done for r in self.requests.values())
+               and self.steps < max_steps):
+            self.step()
+        return {r.req_id: r.out for r in self.requests.values()}

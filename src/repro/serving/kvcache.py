@@ -1,0 +1,185 @@
+"""Paged KV cache on the paper's §V block pool.
+
+KV pages ARE pool blocks: allocation = free-ring pop (prefix-sum slot
+assignment), request completion = push-back (recycling), generation counters
+catch stale block-table references (the ABA guard). Per-layer K/V page data
+lives beside the id pool; block tables map (request, page_idx) -> page id.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockpool import (BlockPool, blockpool_init, pool_alloc,
+                                  pool_free)
+
+
+class PagedKV(NamedTuple):
+    pool: BlockPool
+    k: jnp.ndarray            # [layers, N_pages, page, Hkv, Dh]
+    v: jnp.ndarray
+    block_tables: jnp.ndarray  # [max_reqs, max_pages] int32, -1 empty
+    lengths: jnp.ndarray       # [max_reqs] int32 tokens written
+    active: jnp.ndarray        # [max_reqs] bool
+    refcount: jnp.ndarray      # [N_pages] int32 — prefix-shared pages hold >1
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def max_pages_per_req(self) -> int:
+        return self.block_tables.shape[1]
+
+
+def paged_kv_init(cfg, *, num_pages: int, page_size: int, max_reqs: int,
+                  max_pages_per_req: int) -> PagedKV:
+    ct = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, dh)
+    return PagedKV(
+        pool=blockpool_init(num_pages),
+        k=jnp.zeros(shape, ct),
+        v=jnp.zeros(shape, ct),
+        block_tables=jnp.full((max_reqs, max_pages_per_req), -1, jnp.int32),
+        lengths=jnp.zeros((max_reqs,), jnp.int32),
+        active=jnp.zeros((max_reqs,), bool),
+        refcount=jnp.zeros((num_pages,), jnp.int32),
+    )
+
+
+def admit_requests(kv: PagedKV, slots: jnp.ndarray, prompt_lens: jnp.ndarray,
+                   mask: jnp.ndarray, shared_pages: jnp.ndarray | None = None,
+                   n_shared: jnp.ndarray | None = None):
+    """Allocate pages for admitted prompts. slots: [K] request slots;
+    prompt_lens: [K]. Returns (kv', ok[K]) — ok=False when the pool is
+    exhausted (the paper's allocation-failure path; scheduler retries).
+
+    Prefix sharing: `shared_pages` [K, mp] (-1 pad) + `n_shared` [K] give
+    already-resident pages covering each prompt's leading full pages; their
+    refcount bumps (+1) and only the remainder is allocated."""
+    page = kv.page_size
+    mp = kv.max_pages_per_req
+    k_lanes = slots.shape[0]
+    if shared_pages is None:
+        shared_pages = jnp.full((k_lanes, mp), -1, jnp.int32)
+        n_shared = jnp.zeros((k_lanes,), jnp.int32)
+    total_need = jnp.where(mask, -(-prompt_lens // page), 0)  # pages per req
+    need = jnp.maximum(total_need - n_shared, 0)              # new pages
+    # flatten (req, page_idx) wants: new pages occupy positions n_shared..
+    pos = jnp.arange(mp)[None, :]
+    want_new = (pos >= n_shared[:, None]) & (pos < total_need[:, None]) \
+        & mask[:, None]
+    pool, ids, _handles, got = pool_alloc(kv.pool, want_new.reshape(-1))
+    ids = ids.reshape(k_lanes, mp)
+    got = got.reshape(k_lanes, mp)
+    ok = mask & (jnp.sum(got, axis=1) == need)
+    # rollback lanes that got only part of their pages
+    give_back = got & ~ok[:, None]
+    pool = pool_free(pool, ids.reshape(-1), give_back.reshape(-1))
+    # table rows: shared prefix then new pages
+    is_shared = pos < n_shared[:, None]
+    table_row = jnp.where(is_shared, shared_pages,
+                          jnp.where(got, ids, -1))
+    table_row = jnp.where((pos < total_need[:, None]) & ok[:, None],
+                          table_row, -1)
+    rows = jnp.where(ok, slots, kv.block_tables.shape[0])
+    bt = kv.block_tables.at[rows].set(table_row, mode="drop")
+    lengths = kv.lengths.at[rows].set(jnp.where(ok, prompt_lens, 0), mode="drop")
+    active = kv.active.at[rows].set(ok, mode="drop")
+    # refcounts: new pages -> 1; shared pages -> +1
+    new_idx = jnp.where(got & ok[:, None], ids, kv.refcount.shape[0])
+    refcount = kv.refcount.at[new_idx.reshape(-1)].set(1, mode="drop")
+    sh_idx = jnp.where(is_shared & ok[:, None] & (shared_pages >= 0),
+                       shared_pages, kv.refcount.shape[0])
+    refcount = refcount.at[sh_idx.reshape(-1)].add(1, mode="drop")
+    return kv._replace(pool=pool, block_tables=bt, lengths=lengths,
+                       active=active, refcount=refcount), ok
+
+
+def grow_for_decode(kv: PagedKV, slots: jnp.ndarray, mask: jnp.ndarray):
+    """One more token per request: allocate a fresh page at page boundaries."""
+    page = kv.page_size
+    cur = kv.lengths[slots]
+    needs_page = mask & (cur % page == 0) & (cur // page < kv.max_pages_per_req)
+    pool, ids, _h, got = pool_alloc(kv.pool, needs_page)
+    ok = mask & (~needs_page | got)
+    rows = jnp.where(needs_page & got, slots, kv.block_tables.shape[0])
+    bt = kv.block_tables.at[rows, jnp.where(needs_page & got, cur // page, 0)
+                            ].set(ids, mode="drop")
+    lengths = kv.lengths.at[jnp.where(ok, slots, kv.lengths.shape[0])
+                            ].add(1, mode="drop")
+    refcount = kv.refcount.at[jnp.where(needs_page & got, ids,
+                                        kv.refcount.shape[0])
+                              ].set(1, mode="drop")
+    return kv._replace(pool=pool, block_tables=bt, lengths=lengths,
+                       refcount=refcount), ok
+
+
+def release_requests(kv: PagedKV, slots: jnp.ndarray, mask: jnp.ndarray):
+    """Finish requests: decrement page refcounts; only pages reaching zero
+    return to the free ring (recycling + generation bump — a recycled page
+    auto-invalidates its prefix-cache entries via the ABA check)."""
+    from repro.core.bits import dup_in_run
+
+    mp = kv.max_pages_per_req
+    npg = kv.refcount.shape[0]
+    rows = kv.block_tables[slots]                             # [K, mp]
+    held = mask[:, None] & (rows >= 0)
+    dec_idx = jnp.where(held, rows, npg)
+    refcount = kv.refcount.at[dec_idx.reshape(-1)].add(-1, mode="drop")
+    # free each page ONCE even if several finishing requests shared it:
+    # sort the flattened page list, keep the first held occurrence
+    flat = jnp.where(held, rows, npg).reshape(-1)
+    heldf = held.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    sf = flat[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool), sf[1:] == sf[:-1]])
+    dup = dup_in_run(same, heldf[order])
+    first = heldf[order] & ~dup & (sf < npg)
+    give = first & (refcount[jnp.clip(sf, 0, npg - 1)] <= 0)
+    pool = pool_free(kv.pool, sf, give)
+    r = jnp.where(mask, slots, kv.block_tables.shape[0])
+    bt = kv.block_tables.at[r].set(-1, mode="drop")
+    lengths = kv.lengths.at[r].set(0, mode="drop")
+    active = kv.active.at[r].set(False, mode="drop")
+    return kv._replace(pool=pool, block_tables=bt, lengths=lengths,
+                       active=active, refcount=refcount)
+
+
+def write_prefill(kv: PagedKV, slot, layer_k, layer_v, start_page: int = 0):
+    """Write a prefilled request's KV ([L, S, Hkv, Dh]) into its pages from
+    `start_page` on (prefix-shared pages before it are read-only)."""
+    page = kv.page_size
+    s = layer_k.shape[1]
+    npages = -(-s // page)
+    pad = npages * page - s
+    kpad = jnp.pad(layer_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vpad = jnp.pad(layer_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpag = kpad.reshape(kv.k.shape[0], npages, page, *layer_k.shape[2:])
+    vpag = vpad.reshape(kv.v.shape[0], npages, page, *layer_v.shape[2:])
+    ids = jax.lax.dynamic_slice_in_dim(kv.block_tables[slot], start_page,
+                                       npages)
+    k = kv.k.at[:, ids].set(kpag, mode="drop")
+    v = kv.v.at[:, ids].set(vpag, mode="drop")
+    return kv._replace(k=k, v=v)
+
+
+def write_decode_token(kv: PagedKV, slots, layer_k, layer_v, mask):
+    """Append one token's K/V per request. layer_k: [L, K, Hkv, Dh];
+    call AFTER grow_for_decode (lengths already include the new token)."""
+    page = kv.page_size
+    pos = kv.lengths[slots] - 1                   # the new token's index
+    pid = kv.block_tables[slots, jnp.maximum(pos, 0) // page]
+    off = jnp.maximum(pos, 0) % page
+    ok = mask & (pid >= 0)
+    pidx = jnp.where(ok, pid, kv.k.shape[1])
+    k = kv.k.at[:, pidx, off].set(layer_k, mode="drop")
+    v = kv.v.at[:, pidx, off].set(layer_v, mode="drop")
+    return kv._replace(k=k, v=v)
+
+
+def live_pages(kv: PagedKV) -> jnp.ndarray:
+    return jnp.sum(kv.block_tables >= 0)

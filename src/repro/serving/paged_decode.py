@@ -1,0 +1,91 @@
+"""Decode step reading/writing KV through the paged block pool.
+
+Supports the GQA-attention families (dense/vlm/audio/moe backbones); the
+recurrent families decode through their O(1) states (model.decode_step) and
+use the pool for state blocks instead.
+
+Per layer: project q/k/v for the new token, paged attention over the pool
+pages (Pallas kernel in interpret mode, or the jnp oracle), collect the new
+token's K/V per layer, and scatter all layers into the pool in one update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.models.common import apply_rope, cast, rms_norm
+from repro.models.mlp import mlp
+from repro.serving.kvcache import PagedKV, write_decode_token
+
+
+def paged_decode_step(params, cfg, tokens, slots, kv: PagedKV,
+                      mask=None, use_kernel: bool = False):
+    """tokens: [B, 1] int32; slots: [B] request slots (rows in block_tables).
+    Call AFTER grow_for_decode — lengths already count the new token.
+    `mask`: [B] bool — padding lanes must not write pages (they alias slot 0).
+    Returns (logits [B, V], kv')."""
+    assert cfg.attn_type == "gqa" and cfg.block_pattern == "transformer"
+    b = tokens.shape[0]
+    if mask is None:
+        mask = jnp.ones((b,), bool)
+    ct = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    x = params["embed"][tokens].astype(ct)                 # [B, 1, D]
+    pos = kv.lengths[slots] - 1                            # new token position
+    tables = kv.block_tables[slots]
+    lengths = kv.lengths[slots]
+
+    attend = paged_attention if use_kernel else paged_attention_ref
+
+    def layer(x, xs):
+        bp, k_pool, v_pool = xs
+        p = bp["attn"] if "attn" in bp else bp
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q = (h @ cast(p["wq"], ct)).reshape(b, cfg.n_heads, dh)
+        kn = (h @ cast(p["wk"], ct)).reshape(b, 1, cfg.n_kv_heads, dh)
+        vn = (h @ cast(p["wv"], ct)).reshape(b, 1, cfg.n_kv_heads, dh)
+        if cfg.qkv_bias:
+            q = q + cast(p["bq"], ct).reshape(cfg.n_heads, dh)
+            kn = kn + cast(p["bk"], ct).reshape(1, cfg.n_kv_heads, dh)
+            vn = vn + cast(p["bv"], ct).reshape(1, cfg.n_kv_heads, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            kn = rms_norm(kn, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        kn = apply_rope(kn, pos[:, None], cfg.rope_theta)
+        # write this token's K/V into its page BEFORE attending (the token
+        # attends to itself) — single-page scatter
+        page = kv.page_size
+        pid = tables[jnp.arange(b), jnp.maximum(pos, 0) // page]
+        off = jnp.maximum(pos, 0) % page
+        pidx = jnp.where(mask & (pid >= 0), pid, k_pool.shape[0])
+        k_pool = k_pool.at[pidx, off].set(kn[:, 0].astype(k_pool.dtype),
+                                          mode="drop")
+        v_pool = v_pool.at[pidx, off].set(vn[:, 0].astype(v_pool.dtype),
+                                          mode="drop")
+        o = attend(q, k_pool, v_pool, tables, lengths)
+        y = (o.reshape(b, 1, cfg.n_heads * dh).astype(ct)
+             @ cast(p["wo"], ct))
+        x = x + y
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe and "router" in bp["ffn"]:
+            from repro.models.moe import moe_dense_ffn
+            f, _ = moe_dense_ffn(bp["ffn"], cfg, h2.reshape(b, -1))
+            f = f.reshape(b, 1, -1).astype(x.dtype)
+        else:
+            f = mlp(bp["ffn"], h2, cfg.compute_dtype)
+        return x + f, (k_pool, v_pool)
+
+    x, pools = jax.lax.scan(layer, x, (params["blocks"][0], kv.k, kv.v))
+    kv = kv._replace(k=pools[0], v=pools[1])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    logits = (x[:, 0] @ cast(w, ct)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, kv

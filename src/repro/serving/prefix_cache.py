@@ -1,0 +1,61 @@
+"""Prefix cache: two-level split-order hash table (§VII's winner) mapping
+hash(token-block) -> KV page handle.
+
+Split-order growth fits a serving cache exactly: the table doubles its slot
+count as the cache fills with ZERO rehash movement, so admission latency
+never spikes. Values are (gen << 32 | page_id) pool handles; a hit is only
+usable if the generation still matches (ABA check) — a recycled page
+invalidates its cache entries for free, no eviction sweep needed (the lazy
+deletion idea, transplanted).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import hash64
+from repro.core.blockpool import BlockPool, handle_valid
+from repro.core.splitorder import (TwoLevelSplitOrder, twolevel_splitorder_find,
+                                   twolevel_splitorder_init,
+                                   twolevel_splitorder_insert)
+
+
+class PrefixCache(NamedTuple):
+    table: TwoLevelSplitOrder
+    hits: jnp.ndarray
+    misses: jnp.ndarray
+
+
+def prefix_cache_init(num_tables: int = 16, capacity: int = 1024,
+                      seed_slots: int = 8) -> PrefixCache:
+    return PrefixCache(
+        table=twolevel_splitorder_init(num_tables, capacity, seed_slots),
+        hits=jnp.int64(0), misses=jnp.int64(0))
+
+
+def block_key(tokens_block: jnp.ndarray, prev_key: jnp.ndarray) -> jnp.ndarray:
+    """Rolling hash of a token block chained on the previous block's key
+    (prefix identity = chain of block hashes)."""
+    h = prev_key
+    for i in range(tokens_block.shape[-1]):
+        h = hash64(h ^ tokens_block[..., i].astype(jnp.uint64))
+    return h
+
+
+def lookup(pc: PrefixCache, pool: BlockPool, keys: jnp.ndarray):
+    """Returns (pc', page_ids [-1 miss], hit_mask). Stale (recycled-page)
+    entries are misses via the generation check."""
+    found, handles = twolevel_splitorder_find(pc.table, keys)
+    fresh = found & handle_valid(pool, handles)
+    ids = jnp.where(fresh, (handles & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32), -1)
+    return pc._replace(hits=pc.hits + jnp.sum(fresh, dtype=jnp.int64),
+                       misses=pc.misses + jnp.sum(found.shape[0] - jnp.sum(fresh),
+                                                  dtype=jnp.int64)), ids, fresh
+
+
+def insert(pc: PrefixCache, keys: jnp.ndarray, handles: jnp.ndarray,
+           mask: jnp.ndarray):
+    table, _, _ = twolevel_splitorder_insert(pc.table, keys, handles, mask)
+    return pc._replace(table=table)

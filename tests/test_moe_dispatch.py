@@ -1,0 +1,54 @@
+"""MoE dispatch: single-device reference behaviour + 8-device equivalence
+of the three dispatch implementations (subprocess, fixed device count)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_reduced
+from repro.models import moe as moe_mod
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dense_dispatch_routes_topk():
+    cfg = get_reduced("qwen3-moe-235b-a22b")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model), jnp.float32)
+    y, aux = moe_mod.moe_dense_ffn(p, cfg, x.astype(jnp.bfloat16))
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    assert float(aux) > 0
+    # router selects exactly top-k distinct experts per token
+    w, idx, _ = moe_mod.router_probs(p, cfg, x)
+    assert idx.shape == (32, cfg.n_experts_active)
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == cfg.n_experts_active
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=-1)), 1.0, rtol=1e-5)
+
+
+def test_shared_expert_added_once():
+    cfg = get_reduced("llama4-scout-17b-a16e")
+    from repro.models.blocks import _ffn_apply, init_block
+    p = init_block(jax.random.PRNGKey(0), cfg, "moe")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.bfloat16)
+    y, aux = _ffn_apply(p["ffn"], cfg, x)
+    assert y.shape == x.shape and not bool(jnp.isnan(y).any())
+
+
+@pytest.mark.slow
+def test_moe_dispatch_equivalence_multidevice():
+    prog = os.path.join(ROOT, "tests", "multidev", "moe_prog.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, prog], env=env, capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "MOE-OK" in out.stdout

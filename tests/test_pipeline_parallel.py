@@ -1,0 +1,20 @@
+"""Pipeline-parallel primitive: 4-stage 1F1B-style fill-drain schedule vs
+sequential reference (subprocess: fixed device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    prog = os.path.join(ROOT, "tests", "multidev", "pipeline_prog.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, prog], env=env, capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "PIPELINE-OK" in out.stdout

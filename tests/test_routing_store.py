@@ -1,0 +1,21 @@
+"""Launches the 8-device sharded-store validation as a subprocess (device
+count must be fixed before JAX initializes, so it cannot share this process).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_store_multidevice():
+    prog = os.path.join(ROOT, "tests", "multidev", "store_prog.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, prog], env=env, capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "STORE-OK" in out.stdout

@@ -1,0 +1,182 @@
+"""Serving substrate tests: paged KV cache accounting, scheduler ordering,
+prefix cache ABA semantics, engine-vs-reference generation equality."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_reduced
+from repro.models import model as M
+from repro.serving import kvcache as KV
+from repro.serving import prefix_cache as PC
+from repro.serving import scheduler as SCH
+from repro.serving.engine import Engine, Request
+from repro.core.blockpool import handle_valid, pool_alloc
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("qwen3-1.7b")
+
+
+class TestPagedKV:
+    def test_admit_grow_release_accounting(self, cfg):
+        kv = KV.paged_kv_init(cfg, num_pages=16, page_size=4, max_reqs=4,
+                              max_pages_per_req=4)
+        kv, ok = KV.admit_requests(kv, jnp.asarray([0, 1], jnp.int32),
+                                   jnp.asarray([7, 4], jnp.int32),
+                                   jnp.ones((2,), bool))
+        assert ok.all()
+        assert int(kv.pool.num_free()) == 16 - 2 - 1  # ceil(7/4)+ceil(4/4)
+        # grow at page boundary: req1 at len 4 -> new page
+        kv, ok = KV.grow_for_decode(kv, jnp.asarray([1], jnp.int32),
+                                    jnp.ones((1,), bool))
+        assert ok.all() and int(kv.lengths[1]) == 5
+        assert int(kv.pool.num_free()) == 12
+        kv = KV.release_requests(kv, jnp.asarray([0, 1], jnp.int32),
+                                 jnp.ones((2,), bool))
+        assert int(kv.pool.num_free()) == 16
+        assert not kv.active.any()
+
+    def test_admit_fails_clean_when_pool_exhausted(self, cfg):
+        kv = KV.paged_kv_init(cfg, num_pages=2, page_size=4, max_reqs=2,
+                              max_pages_per_req=4)
+        kv, ok = KV.admit_requests(kv, jnp.asarray([0], jnp.int32),
+                                   jnp.asarray([12], jnp.int32),
+                                   jnp.ones((1,), bool))
+        assert not ok.any()
+        assert int(kv.pool.num_free()) == 2  # rollback returned pages
+
+
+class TestScheduler:
+    def test_priority_then_fifo_order(self):
+        s = SCH.scheduler_init(64)
+        pr = jnp.asarray([2, 0, 1, 0], jnp.uint32)
+        ids = jnp.asarray([10, 11, 12, 13], jnp.int32)
+        s, ok = SCH.submit(s, pr, ids, jnp.ones((4,), bool))
+        assert ok.all()
+        s, got, valid = SCH.pop_min(s, 4)
+        order = [int(g) for g, v in zip(got, valid) if v]
+        assert order == [11, 13, 12, 10]  # priority asc, ticket FIFO ties
+        assert int(SCH.pending(s)) == 0
+
+    def test_pop_partial(self):
+        s = SCH.scheduler_init(64)
+        s, _ = SCH.submit(s, jnp.asarray([5, 1], jnp.uint32),
+                          jnp.asarray([1, 2], jnp.int32), jnp.ones((2,), bool))
+        s, got, valid = SCH.pop_min(s, 1)
+        assert int(got[0]) == 2 and bool(valid[0])
+        assert int(SCH.pending(s)) == 1
+
+
+class TestPrefixCache:
+    def test_hit_miss_and_aba_invalidation(self, cfg):
+        from repro.core.blockpool import blockpool_init, pool_free
+        pool = blockpool_init(8)
+        pool, ids, handles, got = pool_alloc(pool, jnp.ones(2, bool))
+        pc = PC.prefix_cache_init(num_tables=4, capacity=64, seed_slots=2)
+        keys = jnp.asarray([111, 222], jnp.uint64)
+        pc = PC.insert(pc, keys, handles, jnp.ones((2,), bool))
+        pc, pids, hit = PC.lookup(pc, pool, keys)
+        assert hit.all() and (np.asarray(pids) == np.asarray(ids)).all()
+        # recycle page 0 -> its cache entry must turn stale (ABA generation)
+        pool = pool_free(pool, ids[:1], jnp.ones((1,), bool))
+        pc, pids, hit = PC.lookup(pc, pool, keys)
+        assert not bool(hit[0]) and bool(hit[1])
+
+    def test_block_key_chains(self):
+        t1 = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        t2 = jnp.asarray([[1, 2, 3, 5]], jnp.int32)
+        k0 = jnp.zeros((1,), jnp.uint64)
+        a = PC.block_key(t1, k0)
+        b = PC.block_key(t2, k0)
+        assert int(a[0]) != int(b[0])
+        # chaining: same block after different prefixes differs
+        c1 = PC.block_key(t1, a)
+        c2 = PC.block_key(t1, b)
+        assert int(c1[0]) != int(c2[0])
+
+
+class TestPrefixSharing:
+    def test_shared_prefix_pages_and_exact_outputs(self, cfg):
+        """Concurrent requests with shared prefixes must (a) reuse resident
+        pages (refcount sharing, counted hits), (b) produce token-identical
+        outputs, (c) leak no pages (refcounted release)."""
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(3)
+        base = rng.integers(1, cfg.vocab_size, 24)
+        pA = base.copy()
+        pB = np.concatenate([base[:16], rng.integers(1, cfg.vocab_size, 8)])
+        eng = Engine(cfg, params, max_reqs=3, num_pages=32, page_size=8,
+                     max_pages_per_req=8)
+        for i, pr in enumerate([pA, pA, pB]):
+            eng.submit(Request(req_id=i, prompt=pr, max_new=5))
+        while not all(r.done for r in eng.requests.values()):
+            eng.step()
+        outs = {r.req_id: r.out for r in eng.requests.values()}
+
+        def ref(prompt, n):
+            toks = jnp.asarray(prompt, jnp.int32)[None]
+            lg, caches, _ = M.prefill(params, cfg, toks, cache_len=64)
+            out = [int(jnp.argmax(lg[0, -1]))]
+            for t in range(len(prompt), len(prompt) + n - 1):
+                lg, caches = M.decode_step(
+                    params, cfg, jnp.asarray([[out[-1]]], jnp.int32),
+                    jnp.asarray([t], jnp.int32), caches)
+                out.append(int(jnp.argmax(lg[0, 0])))
+            return out
+
+        assert eng.prefix_hits >= 4          # replay: 2 pages; pB prefix: 2
+        assert outs[0] == ref(pA, 5)
+        assert outs[1] == ref(pA, 5)
+        assert outs[2] == ref(pB, 5)
+        assert int(eng.kv.pool.num_free()) == 32
+
+    def test_recycled_pages_invalidate_cache_entries(self, cfg):
+        """Sequential (non-overlapping) identical prompts miss: the pages
+        were recycled, the generation bumped, and the stale prefix-cache
+        entries turned invisible — no wrong reuse, ever (ABA guard)."""
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(4)
+        p = rng.integers(1, cfg.vocab_size, 16)
+        eng = Engine(cfg, params, max_reqs=1, num_pages=16, page_size=8,
+                     max_pages_per_req=8)
+        eng.submit(Request(req_id=0, prompt=p, max_new=3))
+        while not all(r.done for r in eng.requests.values()):
+            eng.step()
+        eng.submit(Request(req_id=1, prompt=p, max_new=3))
+        while not all(r.done for r in eng.requests.values()):
+            eng.step()
+        outs = {r.req_id: r.out for r in eng.requests.values()}
+        assert eng.prefix_hits == 0          # recycled -> stale -> safe miss
+        assert outs[0] == outs[1]            # and identical results
+
+
+class TestEngineE2E:
+    def test_engine_matches_contiguous_reference(self, cfg):
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(1, cfg.vocab_size, n) for n in (8, 12, 8, 16)]
+        eng = Engine(cfg, params, max_reqs=3, num_pages=48, page_size=8,
+                     max_pages_per_req=8)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(req_id=i, prompt=pr, max_new=5, priority=0))
+        outs = eng.run(max_steps=64)
+
+        def ref(prompt, n):
+            toks = jnp.asarray(prompt, jnp.int32)[None]
+            lg, caches, _ = M.prefill(params, cfg, toks, cache_len=64)
+            out = [int(jnp.argmax(lg[0, -1]))]
+            for t in range(len(prompt), len(prompt) + n - 1):
+                lg, caches = M.decode_step(
+                    params, cfg, jnp.asarray([[out[-1]]], jnp.int32),
+                    jnp.asarray([t], jnp.int32), caches)
+                out.append(int(jnp.argmax(lg[0, 0])))
+            return out
+
+        for i, pr in enumerate(prompts):
+            assert outs[i] == ref(pr, 5), f"request {i} diverged"
+        # all pages recycled (no leaks across admissions/evictions)
+        assert int(eng.kv.pool.num_free()) == 48
