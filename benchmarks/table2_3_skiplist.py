@@ -6,77 +6,82 @@ so the erase path actually registers at scaled size).
                updates): the paper's lock-free-find implementation analogue
   RWL        — serialized one-op-at-a-time (reader-writer-lock analogue)
 Sweep batch width ("threads").
+
+Workloads run through the unified `repro.store` API as one `OpPlan` per
+round, so the structure under test is a config string: set
+REPRO_STORE_BACKEND to any registered backend (det_skiplist, rand_skiplist,
+hash+skiplist, ...) to re-run the same table against another engine.
 """
 from __future__ import annotations
+
+import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import bench, emit, keys64
-from repro.core.det_skiplist import (delete_batch, find_batch, insert_batch,
-                                     skiplist_init)
+from repro.store import OP_DELETE, OP_FIND, OP_INSERT, get_backend, make_plan
 
+BACKEND = os.environ.get("REPRO_STORE_BACKEND", "det_skiplist")
 CAP = 1 << 14
 PRELOAD = CAP // 2
 LANES = [4, 8, 16, 32, 64, 128]
 ROUNDS = 16
 
 
-def _preloaded(rng):
-    s = skiplist_init(CAP)
+def _preloaded(be, rng):
+    s = be.init(CAP)
     ks = keys64(rng, PRELOAD)
-    s, _, _ = insert_batch(s, ks, ks)
+    s, _ = be.apply(s, make_plan(np.full(PRELOAD, OP_INSERT, np.int32), ks, ks))
     return s, ks
 
 
-def _mixed_round(cfg_erase: bool):
-    def round_(s, ins_k, find_k, del_k):
-        s, _, _ = insert_batch(s, ins_k, ins_k)
-        f, v, _ = find_batch(s, find_k)
-        if cfg_erase:
-            s, _ = delete_batch(s, del_k)
-        return s, jnp.sum(f)
-    return jax.jit(round_)
+def _mixed_plan(rng, base, n_ins, n_find, n_del):
+    """One linearization unit: inserts + finds (+ deletes) as a single plan."""
+    ops = np.concatenate([np.full(n_ins, OP_INSERT, np.int32),
+                          np.full(n_find, OP_FIND, np.int32),
+                          np.full(n_del, OP_DELETE, np.int32)])
+    keys = np.concatenate([
+        np.asarray(keys64(rng, n_ins)),
+        np.asarray(base)[rng.integers(0, PRELOAD, n_find)],
+        np.asarray(base)[rng.integers(0, PRELOAD, n_del)]])
+    return make_plan(ops, keys, keys)
 
 
 def run():
     rng = np.random.default_rng(0)
+    be = get_backend(BACKEND)
+    round_ = jax.jit(lambda s, p: be.apply(s, p))
+
     for workload, erase in (("wl1", False), ("wl2", True)):
         for lanes in LANES:
-            s, base = _preloaded(rng)
+            s, base = _preloaded(be, rng)
             n_ins = max(1, lanes // 10)
-            n_del = max(1, lanes // 50) if erase else 1
-            round_ = _mixed_round(erase)
-            ins_k = keys64(rng, n_ins)
-            find_k = jnp.asarray(np.asarray(base)[
-                rng.integers(0, PRELOAD, lanes - n_ins)])
-            del_k = jnp.asarray(np.asarray(base)[
-                rng.integers(0, PRELOAD, n_del)])
+            n_del = max(1, lanes // 50) if erase else 0
+            plan = _mixed_plan(rng, base, n_ins, lanes - n_ins, n_del)
 
             def steps(s):
                 for _ in range(ROUNDS):
-                    s, f = round_(s, ins_k, find_k, del_k)
+                    s, r = round_(s, plan)
                 return s
 
             t = bench(steps, s, iters=3)
-            ops = ROUNDS * (n_ins + (lanes - n_ins) + (n_del if erase else 0))
+            ops = ROUNDS * plan.width
             per_op = t / ops
             emit(f"table2_3/lkfreefind/{workload}/threads={lanes}", per_op,
-                 f"ops_per_sec={1.0/per_op:.3e}")
+                 f"ops_per_sec={1.0/per_op:.3e};backend={BACKEND}")
 
     # RWL analogue: one op per jit step
-    s, base = _preloaded(rng)
-    one = _mixed_round(False)
-    k1 = keys64(rng, 1)
-    f1 = jnp.asarray(np.asarray(base)[:1])
+    s, base = _preloaded(be, rng)
+    plan = _mixed_plan(rng, base, 1, 1, 0)
 
     def serial(s):
         for _ in range(ROUNDS):
-            s, f = one(s, k1, f1, f1)
+            s, r = round_(s, plan)
         return s
 
     t = bench(serial, s, iters=3)
     per_op = t / (ROUNDS * 2)
     emit("table2_3/RWL/wl1/threads=1", per_op,
-         f"ops_per_sec={1.0/per_op:.3e}")
+         f"ops_per_sec={1.0/per_op:.3e};backend={BACKEND}")

@@ -5,6 +5,11 @@ table6: one-level vs two-level split-order — wall time + the bytes-touched
         locality proxy standing in for the paper's cache-miss counters
 table7/8: two-level-bucket vs split-order vs two-level split-order at two
         workload sizes (the paper's three-way final comparison)
+
+Every structure runs behind the unified `repro.store` protocol: a sweep is
+(backend name, capacity, init kwargs) and the workload is an `OpPlan`, so
+the comparison matrix IS the backend registry — adding a table variant to
+the paper comparison means registering a backend, nothing here changes.
 """
 from __future__ import annotations
 
@@ -15,36 +20,34 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import bench, emit, keys64
-from repro.core.hashtable import (fixed_find, fixed_init, fixed_insert,
-                                  twolevel_find, twolevel_init, twolevel_insert)
-from repro.core.splitorder import (splitorder_find, splitorder_init,
-                                   splitorder_insert, twolevel_splitorder_find,
-                                   twolevel_splitorder_init,
-                                   twolevel_splitorder_insert)
+from repro.store import OP_FIND, OP_INSERT, get_backend, make_plan
 
 LANES = [16, 64, 256]
 ROUNDS = 8
 
 
-def _mix(insert_fn, find_fn, state, ins_k, find_k):
-    def round_(st):
-        st, _, _ = insert_fn(st, ins_k, ins_k)
-        f, _ = find_fn(st, find_k)
-        return st, jnp.sum(f)
-    return jax.jit(round_)
+def _mixed_plan(ins_k, find_k):
+    n_i, n_f = ins_k.shape[0], find_k.shape[0]
+    ops = np.concatenate([np.full(n_i, OP_INSERT, np.int32),
+                          np.full(n_f, OP_FIND, np.int32)])
+    keys = jnp.concatenate([ins_k, find_k])
+    return make_plan(ops, keys, keys)
 
 
-def _sweep(name, init_state, insert_fn, find_fn, rng, extra=""):
+def _sweep(name, backend, capacity, rng, extra="", **init_kw):
+    be = get_backend(backend)
+    round_ = jax.jit(lambda st, p: be.apply(st, p))
     for lanes in LANES:
-        st = init_state()
+        st = be.init(capacity, **init_kw)
         ins_k = keys64(rng, lanes // 2)
-        st, _, _ = insert_fn(st, ins_k, ins_k)     # warm content
+        st, _ = be.apply(st, make_plan(np.full(lanes // 2, OP_INSERT,
+                                               np.int32), ins_k, ins_k))
         find_k = ins_k[jnp.asarray(rng.integers(0, lanes // 2, lanes // 2))]
-        round_ = _mix(insert_fn, find_fn, st, ins_k, find_k)
+        plan = _mixed_plan(ins_k, find_k)
 
         def steps(st):
             for _ in range(ROUNDS):
-                st, f = round_(st)
+                st, r = round_(st, plan)
             return st
 
         t = bench(steps, st, iters=3)
@@ -56,39 +59,42 @@ def _sweep(name, init_state, insert_fn, find_fn, rng, extra=""):
 def run():
     rng = np.random.default_rng(2)
     # --- table 5: fixed vs two-level ---
-    _sweep("table5/fixed", lambda: fixed_init(1024, 16),
-           fixed_insert, fixed_find, rng)
-    _sweep("table5/twolevel", lambda: twolevel_init(256, 8, 64, 8, 256),
-           twolevel_insert, twolevel_find, rng)
+    _sweep("table5/fixed", "fixed_hash", 16384, rng, bucket=16)
+    _sweep("table5/twolevel", "twolevel_hash", 4096, rng, b1=8, m2=64, b2=8)
 
     # under load: the paper's point — fixed buckets overflow (failed inserts)
     # while threshold expansion absorbs them
     n = 2048
     ks = keys64(rng, n)
-    hf = fixed_init(64, 16)                      # capacity 1024 < n
-    hf, insf, _ = fixed_insert(hf, ks, ks)
-    ht = twolevel_init(64, 8, 64, 8, 128)        # expands per slot
-    ht, inst, _ = twolevel_insert(ht, ks, ks)
+    plan = make_plan(np.full(n, OP_INSERT, np.int32), ks, ks)
+    bf, bt = get_backend("fixed_hash"), get_backend("twolevel_hash")
+    hf = bf.init(1024, bucket=16)                # capacity 1024 < n
+    hf, rf = bf.apply(hf, plan)
+    ht = bt.init(1024, b1=8, m2=64, b2=8)        # expands per slot
+    ht, rt = bt.apply(ht, plan)
     emit("table5/fixed/load=2x", 0.0,
-         f"insert_fail_rate={1 - float(insf.mean()):.3f}")
+         f"insert_fail_rate={1 - float(rf.ok.mean()):.3f}")
     emit("table5/twolevel/load=2x", 0.0,
-         f"insert_fail_rate={1 - float(inst.mean()):.3f};"
-         f"l2_tables={int((np.asarray(ht.l2_block) >= 0).sum())}")
+         f"insert_fail_rate={1 - float(rt.ok.mean()):.3f};"
+         f"l2_tables={int(bt.stats(ht)['l2_tables'])}")
 
     # --- table 6: split-order locality ---
     n_entries = 4096
-    so = splitorder_init(8192, 64, max_load=16)
-    t2 = twolevel_splitorder_init(16, 1024, 8, max_load=16)
+    b1l, b2l = get_backend("splitorder"), get_backend("twolevel_splitorder")
+    so = b1l.init(8192, seed_slots=64, max_load=16)
+    t2 = b2l.init(16384, num_tables=16, seed_slots=8, max_load=16)
     ks = keys64(rng, n_entries)
     for chunk in np.array_split(np.asarray(ks), 8):
-        so, _, _ = splitorder_insert(so, jnp.asarray(chunk), jnp.asarray(chunk))
-        t2, _, _ = twolevel_splitorder_insert(t2, jnp.asarray(chunk),
-                                              jnp.asarray(chunk))
+        p = make_plan(np.full(len(chunk), OP_INSERT, np.int32),
+                      jnp.asarray(chunk), jnp.asarray(chunk))
+        so, _ = b1l.apply(so, p)
+        t2, _ = b2l.apply(t2, p)
     q = ks[jnp.asarray(rng.integers(0, n_entries, 256))]
-    f1 = jax.jit(lambda h, q: splitorder_find(h, q)[0])
-    f2 = jax.jit(lambda h, q: twolevel_splitorder_find(h, q)[0])
-    t_1 = bench(lambda: f1(so, q))
-    t_2 = bench(lambda: f2(t2, q))
+    findp = make_plan(np.full(256, OP_FIND, np.int32), q)
+    f1 = jax.jit(lambda h, p: b1l.apply(h, p)[1].ok)
+    f2 = jax.jit(lambda h, p: b2l.apply(h, p)[1].ok)
+    t_1 = bench(lambda: f1(so, findp))
+    t_2 = bench(lambda: f2(t2, findp))
     # locality proxy: binary-search touch count x 8B (the cache-miss stand-in)
     touch1 = math.log2(n_entries) * 8
     touch2 = math.log2(n_entries / 16) * 8
@@ -101,12 +107,9 @@ def run():
     # --- tables 7/8: three-way ---
     for tag, total in (("table7(100m-scaled)", 1 << 12), ("table8(1b-scaled)", 1 << 14)):
         rng2 = np.random.default_rng(3)
-        _sweep(f"{tag}/BinLists(two-level-bucket)",
-               lambda: twolevel_init(256, 8, 64, 8, 512),
-               twolevel_insert, twolevel_find, rng2)
-        _sweep(f"{tag}/SPO(split-order)",
-               lambda: splitorder_init(total * 2, 64, max_load=16),
-               splitorder_insert, splitorder_find, rng2)
-        _sweep(f"{tag}/2lvl-SPO",
-               lambda: twolevel_splitorder_init(16, total // 4, 8, max_load=16),
-               twolevel_splitorder_insert, twolevel_splitorder_find, rng2)
+        _sweep(f"{tag}/BinLists(two-level-bucket)", "twolevel_hash", 4096,
+               rng2, b1=8, m2=64, b2=8)
+        _sweep(f"{tag}/SPO(split-order)", "splitorder", total * 2, rng2,
+               seed_slots=64, max_load=16)
+        _sweep(f"{tag}/2lvl-SPO", "twolevel_splitorder", total * 4, rng2,
+               num_tables=16, seed_slots=8, max_load=16)

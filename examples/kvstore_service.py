@@ -1,59 +1,100 @@
-"""The paper's own system, cluster-shaped: a sharded ordered KV store.
+"""The paper's own system, cluster-shaped: a sharded KV store over any backend.
 
-One deterministic skiplist per mesh shard (= NUMA node), key space split by
-top key bits, ops routed hierarchically with all_to_all (= the paper's
-lock-free queues), results routed back. Runs on 8 fake devices.
+One structure instance per mesh shard (= NUMA node), key space split by top
+key bits, ops routed hierarchically with all_to_all (= the paper's lock-free
+queues), results routed back. Runs on 8 fake devices.
 
-Run: PYTHONPATH=src python examples/kvstore_service.py
+The store is built through `repro.store.engine`, so the backend is a config
+string: the deterministic skiplist, the two-level hash, the split-order
+table, and the hierarchical hash+skiplist tier stack all serve the exact
+same workload here — and the deterministic linearization makes their
+find/insert/delete results bit-identical, which this example asserts.
+
+Run: PYTHONPATH=src python examples/kvstore_service.py [backend ...]
+     (no args: run all of BACKENDS and cross-check)
 """
 import os
+import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 import repro  # noqa: F401,E402
-from repro.core.ordered_sharded import (OP_DELETE, OP_FIND, OP_INSERT,  # noqa: E402
-                                        make_store_step, sharded_store_init)
+from repro.store import OP_DELETE, OP_FIND, OP_INSERT  # noqa: E402
+from repro.store.engine import StoreEngine  # noqa: E402
 
 AXES = ("pod", "data")
 LANES = 32
+BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist")
+
+
+def workload(n_rounds: int, total: int, seed: int = 0):
+    """Deterministic op stream shared by every backend (vals = key + 1, so
+    in-batch duplicate resolution cannot disagree between backends)."""
+    rng = np.random.default_rng(seed)
+    rounds = []
+    keys = rng.integers(1, 2**63, total, dtype=np.uint64)
+    rounds.append((np.full(total, OP_INSERT, np.int32), keys))
+    for _ in range(n_rounds - 1):
+        ops = rng.choice([OP_FIND, OP_DELETE, OP_INSERT], total,
+                         p=[0.5, 0.25, 0.25]).astype(np.int32)
+        k = keys.copy()
+        fresh = ops == OP_INSERT
+        k[fresh] = rng.integers(1, 2**63, int(fresh.sum()), dtype=np.uint64)
+        rounds.append((ops, k))
+        keys = k
+    return rounds
+
+
+def run_backend(name: str, rounds) -> list:
+    mesh = jax.make_mesh((2, 4), AXES)
+    eng = StoreEngine(mesh, AXES, LANES, backend=name, pool_factor=4)
+    state = jax.device_put(eng.init(4096), eng.sharding)
+    put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+
+    outs = []
+    for rnd, (ops, keys) in enumerate(rounds):
+        state, res, ok, dropped = eng.step(state, put(ops), put(keys),
+                                           put(keys + 1))
+        assert int(dropped) == 0, f"{name}: routing drops"
+        outs.append((np.asarray(ok), np.asarray(res)))
+        finds = ops == OP_FIND
+        if finds.any():
+            hits = int(outs[-1][0][finds].sum())
+            print(f"  [{name}] round {rnd}: finds hit {hits}/{int(finds.sum())}")
+
+    stats = eng.stats(state)   # the Store.stats() accessor — no internals
+    print(f"  [{name}] per-shard live sizes (top-3-bit key partition): "
+          f"{stats['size']}")
+    extra = {k: v.sum() for k, v in stats.items()
+             if k not in ("size", "capacity")}
+    if extra:
+        print(f"  [{name}] totals: " + ", ".join(
+            f"{k}={int(v)}" for k, v in sorted(extra.items())))
+    return outs
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), AXES)
-    sharding = NamedSharding(mesh, P(AXES))
-    state = jax.device_put(sharded_store_init(8, 4096), sharding)
-    step = jax.jit(make_store_step(mesh, AXES, LANES, pool_factor=4))
+    backends = tuple(sys.argv[1:]) or BACKENDS
+    rounds = workload(n_rounds=3, total=8 * LANES)
+    results = {}
+    for name in backends:
+        print(f"backend: {name}")
+        results[name] = run_backend(name, rounds)
 
-    rng = np.random.default_rng(0)
-    total = 8 * LANES
-    put = lambda x: jax.device_put(jnp.asarray(x), sharding)
-
-    # round 1: inserts from every shard
-    keys = rng.integers(1, 2**63, total, dtype=np.uint64)
-    state, res, ok, dropped = step(state, put(np.full(total, OP_INSERT, np.int32)),
-                                   put(keys), put(keys + 1))
-    print(f"inserted {int(np.asarray(ok).sum())}/{total} "
-          f"(dropped={int(dropped)})")
-
-    # round 2: 50% finds / 25% deletes / 25% new inserts
-    ops = rng.choice([OP_FIND, OP_DELETE, OP_INSERT], total,
-                     p=[0.5, 0.25, 0.25]).astype(np.int32)
-    k2 = keys.copy()
-    k2[ops == OP_INSERT] = rng.integers(1, 2**63, int((ops == OP_INSERT).sum()),
-                                        dtype=np.uint64)
-    state, res, ok, dropped = step(state, put(ops), put(k2), put(k2 + 1))
-    finds = ops == OP_FIND
-    print(f"finds hit {int(np.asarray(ok)[finds].sum())}/{int(finds.sum())}, "
-          f"deletes ok {int(np.asarray(ok)[ops == OP_DELETE].sum())}, "
-          f"dropped={int(dropped)}")
-    sizes = np.asarray(jax.device_get(state.n_term)) - np.asarray(
-        jax.device_get(state.n_marked))
-    print("per-shard live sizes (key-space partition by top 3 bits):", sizes)
+    if len(results) > 1:
+        ref_name, *others = list(results)
+        ref = results[ref_name]
+        for name in others:
+            for r, ((ok_a, res_a), (ok_b, res_b)) in enumerate(
+                    zip(ref, results[name])):
+                assert (ok_a == ok_b).all(), (ref_name, name, r, "ok")
+                assert (res_a == res_b).all(), (ref_name, name, r, "vals")
+        print(f"all {len(results)} backends produced identical results "
+              f"({len(rounds)} rounds x {8 * LANES} lanes)")
 
 
 if __name__ == "__main__":

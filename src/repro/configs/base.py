@@ -80,6 +80,9 @@ class ModelConfig:
     # --- kvstore (the paper's own architecture) ---
     store_capacity: int = 0
     store_lanes: int = 0
+    store_backend: str = "det_skiplist"  # any repro.store registry name
+                                         # (e.g. twolevel_hash, splitorder,
+                                         # hash+skiplist tier stack)
 
     @property
     def resolved_head_dim(self) -> int:

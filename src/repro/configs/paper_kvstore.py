@@ -1,11 +1,21 @@
-"""The paper's own architecture: the sharded ordered-set (skiplist) service
-(§VI) as a dry-run config — store_step lowers on the production meshes."""
+"""The paper's own architecture: the sharded ordered-set service (§VI) as a
+dry-run config — the store step lowers on the production meshes.
+
+`store_backend` selects the engine through the `repro.store` registry:
+"det_skiplist" is the paper's flagship; "hash+skiplist" is its §IX
+hierarchical proposal (hot hash tier over the ordered skiplist); any other
+registered backend (twolevel_hash, splitorder, ...) drops in unchanged."""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(
     name="paper-kvstore", family="kvstore",
     store_capacity=65536, store_lanes=4096,
+    store_backend="det_skiplist",
 )
 
 def reduced():
     return CONFIG.replace(store_capacity=512, store_lanes=32)
+
+def tiered():
+    """The §IX hierarchical composition on the same shapes."""
+    return CONFIG.replace(store_backend="hash+skiplist")

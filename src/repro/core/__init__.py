@@ -5,8 +5,16 @@ blockpool     §V memory manager: id pool + free ring + ABA generations
 ringqueue     §III LCRQ-adapted block queue with recycling
 det_skiplist  §II deterministic 1-2-3-4 skiplist (the primary contribution)
 rand_skiplist §VI randomized comparator (table IV)
-hashtable     §VII fixed-slot + two-level MWMR tables
+hashtable     §VII fixed-slot + two-level MWMR tables (insert/find/delete)
 splitorder    §VII split-order + two-level split-order tables
 routing       §I/§VI hierarchical NUMA->mesh key routing (all-to-all)
-ordered_sharded  sharded ordered-set service (routing + skiplist)
+ordered_sharded  compatibility veneer: the original skiplist-backed sharded
+                 service API, now thin wrappers over `repro.store.engine`
+
+The uniform access layer lives one package up in `repro.store`: every
+structure here is also registered as a `Store` backend (api/backends), the
+§IX hierarchical composition is `repro.store.tiers` (hot hash tier over the
+ordered skiplist), and the mesh-sharded engine over any backend is
+`repro.store.engine`. New code should go through that protocol; this package
+stays the home of the raw batched primitives.
 """

@@ -149,8 +149,10 @@ def fixed_delete(h: FixedHash, keys: jnp.ndarray, mask: jnp.ndarray | None = Non
     found = jnp.any(hit, axis=1) & mask & (keys != EMPTY)
     col = jnp.argmax(hit, axis=1).astype(jnp.int32)
     # in-batch duplicate deletes target the same cell: scatter of EMPTY is
-    # idempotent, count via unique cells -> dedupe by (slot,col)
-    cell = slots * B + col
+    # idempotent, count via unique cells -> dedupe by (slot,col); non-found
+    # lanes park at the sentinel cell so a miss with col==0 can never alias a
+    # genuine hit at column 0 into a false duplicate
+    cell = jnp.where(found, slots * B + col, M * B)
     o = jnp.argsort(cell, stable=True)
     cs = cell[o]
     fdup = jnp.concatenate([jnp.zeros((1,), bool), cs[1:] == cs[:-1]]) & found[o]
@@ -288,3 +290,50 @@ def twolevel_insert(h: TwoLevelHash, keys: jnp.ndarray, vals: jnp.ndarray,
                       l2_keys=nk2, l2_vals=nv2, pool=pool2,
                       count=h.count + jnp.sum(ins).astype(jnp.int64))
     return h2, ins[inv], (exists | dup)[inv]
+
+
+def twolevel_delete(h: TwoLevelHash, keys: jnp.ndarray,
+                    mask: jnp.ndarray | None = None):
+    """Delete from either level: scatter EMPTY into the matched cell.
+
+    In-batch duplicate deletes of one key target the same cell and are deduped
+    by a global cell id (L1 cells first, then L2 cells) so the count stays
+    exact — the same first-lane-wins linearization as fixed_delete. Expanded
+    L2 tables stay allocated even when emptied (the paper never shrinks a
+    slot's second level). Returns (h', deleted[K])."""
+    K = keys.shape[0]
+    M1, B1 = h.l1_keys.shape
+    P, M2, B2 = h.l2_keys.shape
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != EMPTY)
+    s1, s2 = _slots12(h, keys)
+
+    rows1 = h.l1_keys[s1]
+    hit1 = rows1 == keys[:, None]
+    f1 = jnp.any(hit1, axis=1) & mask
+    col1 = jnp.argmax(hit1, axis=1).astype(jnp.int32)
+    blk = h.l2_block[s1]
+    safe = jnp.maximum(blk, 0)
+    rows2 = h.l2_keys[safe, s2]
+    hit2 = (rows2 == keys[:, None]) & (blk >= 0)[:, None]
+    f2 = jnp.any(hit2, axis=1) & mask & ~f1
+    col2 = jnp.argmax(hit2, axis=1).astype(jnp.int32)
+
+    found = f1 | f2
+    cell1 = s1 * B1 + col1
+    cell2 = M1 * B1 + (safe * M2 + s2) * B2 + col2
+    cell = jnp.where(f1, cell1, jnp.where(f2, cell2, M1 * B1 + P * M2 * B2))
+    o = jnp.argsort(cell, stable=True)
+    cs = cell[o]
+    fdup = jnp.concatenate([jnp.zeros((1,), bool), cs[1:] == cs[:-1]]) & found[o]
+    inv = jnp.zeros((K,), jnp.int32).at[o].set(jnp.arange(K, dtype=jnp.int32))
+    eff = found & ~fdup[inv]
+
+    flat1 = jnp.where(eff & f1, cell1, M1 * B1)
+    nk1 = h.l1_keys.reshape(-1).at[flat1].set(EMPTY, mode="drop").reshape(M1, B1)
+    flat2 = jnp.where(eff & f2, (safe * M2 + s2) * B2 + col2, P * M2 * B2)
+    nk2 = h.l2_keys.reshape(-1).at[flat2].set(EMPTY, mode="drop").reshape(P, M2, B2)
+    h2 = h._replace(l1_keys=nk1, l2_keys=nk2,
+                    count=h.count - jnp.sum(eff).astype(jnp.int64))
+    return h2, eff

@@ -10,120 +10,44 @@ locally, results routed back to the requesting shard/lane.
 Batch linearization order (deterministic): INSERTS, then DELETES, then FINDS.
 A find in batch t observes every insert/delete of batches <= t.
 
-This module is also the paper's-own-architecture config for the dry-run
-(`configs/paper_kvstore.py`): `store_step` lowers and compiles on the
-production meshes like any LM train_step.
+This module is now a compatibility veneer: the machinery lives in
+`repro.store.engine`, which generalizes the same routing + local-apply step
+to ANY registered backend (hash tables, split-order, the tiered
+hash+skiplist stack, ...). These wrappers pin the backend the paper used —
+the deterministic skiplist — so existing callers and the dry-run config
+(`configs/paper_kvstore.py`) keep working unchanged.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import Mesh
 
-from repro.core import det_skiplist as dsl
-from repro.core.bits import KEY_INF
-from repro.core.routing import route_back, route_to_owners
+from repro.store import engine as store_engine
+# op codes are canonical in repro.store.api; re-exported here for callers
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE,  # noqa: F401
+                             OP_RANGE)
 
-OP_NONE, OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE = -1, 0, 1, 2, 3
+store_sharding = store_engine.store_sharding
 
 
 def sharded_store_init(n_shards: int, capacity_per_shard: int):
     """Skiplist pytree with a leading shard dim (to be sharded over the mesh)."""
-    one = dsl.skiplist_init(capacity_per_shard)
-    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_shards,) + x.shape), one)
-
-
-def store_sharding(mesh: Mesh, axis_names: Sequence[str]):
-    """NamedShardings: state sharded on dim 0 over all routing axes; op
-    streams likewise (each shard issues its own lanes)."""
-    spec_state = P(tuple(axis_names))
-    return NamedSharding(mesh, spec_state)
+    return store_engine.sharded_init("det_skiplist", n_shards,
+                                     capacity_per_shard)
 
 
 def make_store_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
                     pool_factor: int = 2):
-    """Build the jit-able batched-op step.
-
-    Global inputs: ops[int32 S*lanes], keys[u64 S*lanes], vals[u64 S*lanes]
-    sharded over the routing axes (S = total shards; each shard contributes
-    `lanes` requests — "threads fill queues, then operate", §IX).
-    Returns (state', results[u64], ok[bool]).
-    """
-    axis_sizes = [mesh.shape[a] for a in axis_names]
-    n_shards = int(math.prod(axis_sizes))
-    pool = lanes * pool_factor
-
-    def body(state, ops, keys, vals):
-        sl = jax.tree.map(lambda x: x[0], state)      # this shard's skiplist
-        valid = ops >= 0
-        rr = route_to_owners(keys, vals, ops, valid, axis_names, axis_sizes, pool)
-
-        ins_m = rr.valid & (rr.aux == OP_INSERT)
-        del_m = rr.valid & (rr.aux == OP_DELETE)
-        sl, inserted, existed = dsl.insert_batch(sl, rr.keys, rr.vals, ins_m)
-        sl, deleted = dsl.delete_batch(sl, rr.keys, del_m)
-        found, fvals, _ = dsl.find_batch(sl, jnp.where(rr.valid, rr.keys, KEY_INF))
-
-        ok = jnp.where(rr.aux == OP_FIND, found,
-                       jnp.where(rr.aux == OP_INSERT, inserted | existed, deleted))
-        res = jnp.where(rr.aux == OP_FIND, fvals,
-                        jnp.where(rr.aux == OP_INSERT,
-                                  existed.astype(jnp.uint64), jnp.uint64(0)))
-        res, okb = route_back(res, ok, rr.origin, rr.valid & (rr.aux >= 0),
-                              axis_names, axis_sizes, lanes)
-        state2 = jax.tree.map(lambda a, b: b[None], state, sl)
-        return state2, res, okb, rr.dropped[None]   # [1] per shard -> [S] global
-
-    spec1 = P(tuple(axis_names))
-    step = shard_map(body, mesh=mesh,
-                     in_specs=(spec1, spec1, spec1, spec1),
-                     out_specs=(spec1, spec1, spec1, P(tuple(axis_names))))
-
-    def wrapped(state, ops, keys, vals):
-        st, res, ok, dropped = step(state, ops, keys, vals)
-        return st, res, ok, jnp.sum(dropped)
-
-    return wrapped
+    """The original skiplist-backed batched-op step (see engine.make_store_step)."""
+    return store_engine.make_store_step(mesh, axis_names, lanes,
+                                        backend="det_skiplist",
+                                        pool_factor=pool_factor)
 
 
 def make_range_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
                     max_out: int, pool_factor: int = 2):
-    """Range counting: [lo, hi) per lane. Ranges crossing shard boundaries are
-    answered by every touched shard and summed on the way back (the skiplist's
-    contiguous terminal level makes the local part a gather — §II's argument
-    for skiplists over BSTs)."""
-    axis_sizes = [mesh.shape[a] for a in axis_names]
-    n_shards = int(math.prod(axis_sizes))
-    pool = lanes * pool_factor
-    bits_shards = int(math.log2(n_shards)) if n_shards > 1 else 0
-
-    def body(state, los, his, valid):
-        valid = valid.astype(jnp.int32)
-        sl = jax.tree.map(lambda x: x[0], state)
-        # broadcast every range to all shards whose key interval intersects:
-        # here, simple + correct — replicate ranges via all_gather along the
-        # routing axes, count locally, then psum (a 2-collective pattern
-        # instead of the paper's per-key queues: ranges are rare + wide)
-        ls, hs, vs = los, his, valid
-        for a in axis_names:
-            ls = jax.lax.all_gather(ls, a, axis=0, tiled=True)
-            hs = jax.lax.all_gather(hs, a, axis=0, tiled=True)
-            vs = jax.lax.all_gather(vs, a, axis=0, tiled=True)
-        cnt, _, _, _ = dsl.range_query(sl, ls, hs, max_out)
-        cnt = jnp.where(vs > 0, cnt, 0)
-        for a in axis_names:
-            cnt = jax.lax.psum(cnt, a)
-        # return this shard's slice of the global answer
-        me = jnp.int32(0)
-        for a in axis_names:
-            me = me * jax.lax.axis_size(a) + jax.lax.axis_index(a).astype(jnp.int32)
-        return jax.lax.dynamic_slice_in_dim(cnt, me * lanes, lanes)
-
-    spec1 = P(tuple(axis_names))
-    return shard_map(body, mesh=mesh, in_specs=(spec1, spec1, spec1, spec1),
-                     out_specs=spec1)
+    """The original skiplist-backed range step (see engine.make_range_step)."""
+    return store_engine.make_range_step(mesh, axis_names, lanes, max_out,
+                                        backend="det_skiplist",
+                                        pool_factor=pool_factor)

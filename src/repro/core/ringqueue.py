@@ -78,14 +78,15 @@ def queue_size(q: RingQueue) -> jnp.ndarray:
 
 
 def _chain(q: RingQueue, start: jnp.ndarray, span: int):
-    """Unrolled walk of `span` chain blocks from `start`; -1 past the end."""
+    """Unrolled walk of `span` chain blocks from `start`; -1 past the end.
+    Returns ([span] ids, the continuation id after the last one)."""
     ids = []
     cur = start
     for _ in range(span):
         ids.append(cur)
         safe = jnp.maximum(cur, 0)
         cur = jnp.where(cur >= 0, q.nxt[safe], NO_BLK)
-    return jnp.stack(ids)  # [span] int32
+    return jnp.stack(ids), cur  # [span] int32, scalar int32
 
 
 def push_batch(q: RingQueue, vals: jnp.ndarray, mask: jnp.ndarray):
@@ -175,7 +176,7 @@ def pop_batch(q: RingQueue, n_lanes: int, want: jnp.ndarray | None = None):
     want = want.astype(bool)
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1
 
-    ids = _chain(q, q.head_blk, span)                      # [span]
+    ids, follow = _chain(q, q.head_blk, span)              # [span], cont.
     safe = jnp.maximum(ids, 0)
     valid_blk = ids >= 0
     fronts = jnp.where(valid_blk, q.front[safe], 0)
@@ -215,11 +216,14 @@ def pop_batch(q: RingQueue, n_lanes: int, want: jnp.ndarray | None = None):
     use = q.use.at[dead_rows].set(False, mode="drop")
     recycles = q.recycles.at[dead_rows].add(jnp.uint32(1), mode="drop")
 
-    # head advances to the first non-dead chain block (tail if all dead)
+    # head advances past the dead prefix: to the first alive chain block,
+    # else to the chain CONTINUATION (the block after the last spanned one —
+    # jumping straight to tail would orphan any unconsumed blocks between)
     alive = valid_blk & ~dead
     first_alive = jnp.argmax(alive)
     any_alive = jnp.any(alive)
-    head_blk = jnp.where(any_alive, safe[first_alive], q.tail_blk)
+    cont = jnp.where(follow >= 0, follow, q.tail_blk)
+    head_blk = jnp.where(any_alive, safe[first_alive], cont)
 
     q2 = q._replace(fe=fe, front=front, rear=rear, wclosed=wclosed,
                     rclosed=rclosed, nxt=nxt, use=use, recycles=recycles,

@@ -133,6 +133,43 @@ def splitorder_insert(h: SplitOrderHash, keys: jnp.ndarray, vals: jnp.ndarray,
     return h2, new[inv], (exists | dup)[inv]
 
 
+def splitorder_delete(h: SplitOrderHash, keys: jnp.ndarray,
+                      mask: jnp.ndarray | None = None):
+    """Batched delete: locate by (rk, key), then physically compact survivors.
+
+    The sorted-array analogue of unlinking a node: split-order segment anchors
+    are computed (not stored), so compaction needs no rehash and `n_slots` is
+    untouched (the paper never shrinks the table). In-batch duplicate deletes
+    of one key resolve to the first lane (they match the same cell).
+    Returns (h', deleted[K])."""
+    K = keys.shape[0]
+    C = h.capacity
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+    rkq = _rk_of(keys)
+    pos = jnp.searchsorted(h.rk, rkq, side="left").astype(jnp.int32)
+    found, at = _window_match(h.rk, h.keys, pos, rkq, keys)
+    found = found & mask
+
+    # dedupe in-batch duplicates by target cell (first lane wins)
+    cell = jnp.where(found, at, C)
+    o = jnp.argsort(cell, stable=True)
+    cs = cell[o]
+    fdup = jnp.concatenate([jnp.zeros((1,), bool), cs[1:] == cs[:-1]]) & found[o]
+    inv = jnp.zeros((K,), jnp.int32).at[o].set(jnp.arange(K, dtype=jnp.int32))
+    eff = found & ~fdup[inv]
+
+    dead = jnp.zeros((C,), bool).at[jnp.where(eff, at, C)].set(True, mode="drop")
+    keep = ~dead & (jnp.arange(C) < h.n)
+    dest = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32)) - 1, C)
+    rk2 = jnp.full((C,), KEY_INF).at[dest].set(h.rk, mode="drop")
+    k2 = jnp.full((C,), KEY_INF).at[dest].set(h.keys, mode="drop")
+    v2 = jnp.zeros((C,), jnp.uint64).at[dest].set(h.vals, mode="drop")
+    n2 = jnp.sum(keep).astype(jnp.int32)
+    return h._replace(rk=rk2, keys=k2, vals=v2, n=n2), eff
+
+
 def splitorder_slot_bounds(h: SplitOrderHash, keys: jnp.ndarray):
     """Segment [lo, hi) of each key's slot under the CURRENT n_slots — the
     implicit dummy-node anchors; used by the locality bench (table VI)."""
@@ -228,3 +265,25 @@ def twolevel_splitorder_insert(h: TwoLevelSplitOrder, keys: jnp.ndarray,
         h.rk, h.keys, h.vals, h.n, h.n_slots, jnp.arange(T, dtype=jnp.int32))
     h2 = h._replace(rk=rk2, keys=k2, vals=v2, n=n2, n_slots=s2)
     return h2, jnp.any(ins, axis=0), jnp.any(ex, axis=0)
+
+
+def twolevel_splitorder_delete(h: TwoLevelSplitOrder, keys: jnp.ndarray,
+                               mask: jnp.ndarray | None = None):
+    """Route lanes to owner tables, vmapped per-table compacting delete.
+    Returns (h', deleted[K])."""
+    K = keys.shape[0]
+    T, C2 = h.rk.shape
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    mask = mask & (keys != KEY_INF)
+    t = _table_of(h, keys)
+
+    def one_table(rk_row, key_row, val_row, n_row, slots_row, tbl_id):
+        sub = SplitOrderHash(rk=rk_row, keys=key_row, vals=val_row, n=n_row,
+                             n_slots=slots_row, max_load=h.max_load)
+        sub2, eff = splitorder_delete(sub, keys, mask & (t == tbl_id))
+        return sub2.rk, sub2.keys, sub2.vals, sub2.n, eff
+
+    rk2, k2, v2, n2, eff = jax.vmap(one_table)(
+        h.rk, h.keys, h.vals, h.n, h.n_slots, jnp.arange(T, dtype=jnp.int32))
+    return h._replace(rk=rk2, keys=k2, vals=v2, n=n2), jnp.any(eff, axis=0)

@@ -213,19 +213,20 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     with use_mesh(mesh, dp_axes=dp_axes, tp_axis="model"):
         if cfg.family == "kvstore":
-            from repro.core.ordered_sharded import (make_store_step,
-                                                    sharded_store_init)
+            from repro.store.engine import make_store_step, sharded_init
             lanes = cfg.store_lanes
             nsh = n_devices(mesh)
-            state = jax.eval_shape(partial(sharded_store_init, nsh,
-                                           cfg.store_capacity))
+            report["store_backend"] = cfg.store_backend
+            state = jax.eval_shape(partial(sharded_init, cfg.store_backend,
+                                           nsh, cfg.store_capacity))
             sp = P(tuple(mesh.axis_names))
             state = jax.tree.map(lambda l: jax.ShapeDtypeStruct(
                 l.shape, l.dtype, sharding=NamedSharding(
                     mesh, P(tuple(mesh.axis_names), *([None] * (l.ndim - 1))))), state)
             stream = lambda dt: jax.ShapeDtypeStruct(
                 (nsh * lanes,), dt, sharding=NamedSharding(mesh, sp))
-            step = make_store_step(mesh, tuple(mesh.axis_names), lanes)
+            step = make_store_step(mesh, tuple(mesh.axis_names), lanes,
+                                   backend=cfg.store_backend)
             lowered = jax.jit(step).lower(state, stream(jnp.int32),
                                           stream(jnp.uint64), stream(jnp.uint64))
         elif shape.kind == "train":
@@ -281,6 +282,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
         compiled = lowered.compile()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per device
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         report["flops"] = float(ca.get("flops", 0.0))
         report["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))

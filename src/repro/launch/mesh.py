@@ -12,8 +12,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     it hierarchically (coarsest first), per the paper's NUMA hierarchy."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):      # jax >= 0.5
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)          # 0.4.x: Auto is the default
 
 
 def dp_axes_of(mesh) -> tuple:

@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.routing import axis_size
+
 
 def compress_state_init(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -28,7 +30,7 @@ def _quant(g):
 def pod_allreduce_compressed(grads, residuals, axis: str):
     """Per-leaf: g' = mean_pods(dequant(quant(g + residual))); residual
     updated with the local quantization error. Returns (grads', residuals')."""
-    npods = jax.lax.axis_size(axis)
+    npods = axis_size(axis)
 
     def one(g, r):
         g32 = g.astype(jnp.float32) + r
@@ -48,5 +50,5 @@ def pod_allreduce_compressed(grads, residuals, axis: str):
 
 
 def pod_allreduce_plain(grads, axis: str):
-    npods = jax.lax.axis_size(axis)
+    npods = axis_size(axis)
     return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)

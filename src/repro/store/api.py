@@ -1,0 +1,120 @@
+"""Storage-engine protocol: one API over every concurrent structure.
+
+The paper's closing proposal is *hierarchical usage of concurrent data
+structures in programs* — composing skiplists, hash tables, and queues into
+one system to cut remote-node memory accesses. That composition needs a
+common contract first: this module defines it.
+
+* `OpPlan` — a batch of K operations as parallel arrays (ops/keys/vals/mask).
+  A lane is one "thread"; the whole plan is one linearization unit with the
+  deterministic order INSERTS -> DELETES -> FINDS, first-lane-wins on
+  in-batch duplicates (strictly stronger than the paper's "some
+  linearization exists").
+* `OpResults` — per-lane (ok, vals): FIND -> (hit, stored value);
+  INSERT -> (applied, already-existed flag); DELETE -> (removed, 0).
+* `Store` — the backend protocol: `init(capacity, **kw)` builds a
+  jit/shard_map-safe pytree state, `apply(state, plan)` executes a plan,
+  `scan(state, lo, hi, max_out)` is the ordered range query (unordered
+  backends raise NotImplementedError and advertise `ordered = False`),
+  `stats(state)` returns uniform occupancy scalars (at least `size` and
+  `capacity`).
+* registry — backends register under a string key so callers select one by
+  config (`configs/paper_kvstore.py: store_backend`) and every future
+  backend is a one-file drop-in.
+
+Op codes are shared with the router (`core/ordered_sharded.py` re-exports
+them for compatibility): lane op `OP_NONE` means an idle lane.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+OP_NONE, OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE = -1, 0, 1, 2, 3
+
+
+class OpPlan(NamedTuple):
+    """A batch of K ops as parallel arrays — the unit of linearization."""
+    ops: jnp.ndarray    # [K] int32 op codes (OP_NONE lanes are idle)
+    keys: jnp.ndarray   # [K] uint64
+    vals: jnp.ndarray   # [K] uint64 (insert payloads; ignored otherwise)
+    mask: jnp.ndarray   # [K] bool — False lanes are no-ops with ok=False
+
+    @property
+    def width(self) -> int:
+        return self.ops.shape[0]
+
+
+class OpResults(NamedTuple):
+    ok: jnp.ndarray     # [K] bool — FIND hit / INSERT applied / DELETE removed
+    vals: jnp.ndarray   # [K] uint64 — FIND value; INSERT existed flag; else 0
+
+
+def make_plan(ops, keys, vals=None, mask=None) -> OpPlan:
+    """Convenience constructor with dtype coercion and default vals/mask."""
+    ops = jnp.asarray(ops, jnp.int32)
+    keys = jnp.asarray(keys, jnp.uint64)
+    vals = jnp.zeros_like(keys) if vals is None else jnp.asarray(vals, jnp.uint64)
+    mask = jnp.ones(ops.shape, bool) if mask is None else jnp.asarray(mask, bool)
+    return OpPlan(ops=ops, keys=keys, vals=vals, mask=mask)
+
+
+@runtime_checkable
+class Store(Protocol):
+    """Backend protocol. State is an opaque jit-able pytree; every method is
+    pure (state in, state out) so backends compose with jit/shard_map/vmap
+    and checkpoint for free."""
+
+    name: str
+    ordered: bool
+
+    def init(self, capacity: int, **kw) -> Any:
+        """Empty state holding up to ~capacity entries."""
+        ...
+
+    def apply(self, state: Any, plan: OpPlan) -> tuple[Any, OpResults]:
+        """Execute a plan under the deterministic linearization."""
+        ...
+
+    def scan(self, state: Any, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
+        """Batched range query over [lo, hi) rows. Returns
+        (count[Q], keys[Q, max_out], vals[Q, max_out], valid[Q, max_out]).
+        Unordered backends raise NotImplementedError."""
+        ...
+
+    def stats(self, state: Any) -> Dict[str, jnp.ndarray]:
+        """Uniform occupancy scalars; at least `size` (live entries) and
+        `capacity`. No caller should reach into backend internals."""
+        ...
+
+
+_REGISTRY: Dict[str, Store] = {}
+
+
+def register(backend: Store) -> Store:
+    """Register a backend instance under its `name` (decorator-friendly)."""
+    if backend.name in _REGISTRY:
+        raise ValueError(f"store backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def _ensure_builtin() -> None:
+    # importing these modules registers the built-in backends; deferred so
+    # api.py itself stays dependency-free (no import cycles)
+    from repro.store import backends, tiers  # noqa: F401
+
+
+def get_backend(name: str) -> Store:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown store backend {name!r}; "
+                       f"available: {sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> list[str]:
+    _ensure_builtin()
+    return sorted(_REGISTRY)

@@ -1,0 +1,200 @@
+"""Built-in `Store` adapters over the paper's concurrent structures.
+
+Each adapter wraps one core module behind the uniform protocol of
+`store.api`. All share one linearization helper so every backend agrees,
+lane for lane, on mixed insert/find/delete plans: INSERTS apply first
+(insert-if-absent, first lane wins on in-batch duplicates), then DELETES
+(first lane wins), then FINDS observe the post-update state. This is what
+makes backends interchangeable — `examples/kvstore_service.py` asserts
+bit-identical results across all of them on the 8-device mesh.
+
+Registered names:
+  det_skiplist         §II deterministic 1-2-3-4 skiplist (ordered)
+  rand_skiplist        §VI randomized comparator (ordered)
+  fixed_hash           §VII fixed-slot MWMR table
+  twolevel_hash        §VII two-level table with pooled L2 expansion
+  splitorder           §VII/VIII split-order table
+  twolevel_splitorder  §VIII two-level split-order (NUMA-partition analogue)
+(`tiers.py` adds the hierarchical `hash+skiplist` stack.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import det_skiplist as dsl
+from repro.core import hashtable as ht
+from repro.core import rand_skiplist as rsl
+from repro.core import splitorder as so
+from repro.core.bits import EMPTY, KEY_INF
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, OpResults,
+                             register)
+
+
+def _pow2(n: int) -> int:
+    """Largest power of two <= max(n, 1)."""
+    return 1 << max(int(n).bit_length() - 1, 0)
+
+
+def finalize_results(ops, valid, found, fvals, inserted, existed,
+                     deleted) -> OpResults:
+    """The per-lane (ok, res) encoding every backend must share — FIND ->
+    (hit, value), INSERT -> (applied, existed flag), DELETE -> (removed, 0).
+    One implementation so the bit-identical cross-backend contract has a
+    single source of truth (tiers.py uses it too)."""
+    ok = jnp.where(ops == OP_FIND, found,
+                   jnp.where(ops == OP_INSERT, inserted | existed,
+                             deleted)) & valid
+    res = jnp.where(valid & (ops == OP_FIND), fvals,
+                    jnp.where(valid & (ops == OP_INSERT),
+                              existed.astype(jnp.uint64), jnp.uint64(0)))
+    return OpResults(ok=ok, vals=res)
+
+
+def apply_linearized(state, plan: OpPlan, insert_fn, delete_fn, find_fn,
+                     absent_key):
+    """The shared INSERTS -> DELETES -> FINDS execution over masked batch
+    primitives. `find_fn(state, keys) -> (found, vals)`; `absent_key` is the
+    backend's sentinel for lanes that must not match anything."""
+    valid = plan.mask & (plan.ops >= 0)
+    ins_m = valid & (plan.ops == OP_INSERT)
+    del_m = valid & (plan.ops == OP_DELETE)
+    state, inserted, existed = insert_fn(state, plan.keys, plan.vals, ins_m)
+    state, deleted = delete_fn(state, plan.keys, del_m)
+    found, fvals = find_fn(state, jnp.where(valid, plan.keys, absent_key))
+    return state, finalize_results(plan.ops, valid, found, fvals, inserted,
+                                   existed, deleted)
+
+
+class DetSkiplistBackend:
+    name = "det_skiplist"
+    ordered = True
+
+    def init(self, capacity: int, **kw):
+        return dsl.skiplist_init(capacity)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(
+            state, plan, dsl.insert_batch, dsl.delete_batch,
+            lambda s, q: dsl.find_batch(s, q)[:2], KEY_INF)
+
+    def scan(self, state, lo, hi, max_out: int):
+        return dsl.range_query(state, lo, hi, max_out)
+
+    def stats(self, state):
+        return {"size": (state.n_term - state.n_marked).astype(jnp.int64),
+                "tombstones": state.n_marked.astype(jnp.int64),
+                "capacity": jnp.int64(state.term_keys.shape[0])}
+
+
+class RandSkiplistBackend:
+    name = "rand_skiplist"
+    ordered = True
+
+    def init(self, capacity: int, **kw):
+        return rsl.rand_skiplist_init(capacity)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(
+            state, plan, rsl.insert_batch, rsl.delete_batch,
+            lambda s, q: rsl.find_batch(s, q)[:2], KEY_INF)
+
+    def scan(self, state, lo, hi, max_out: int):
+        # the randomized variant keeps the same contiguous sorted terminal
+        # level, so the deterministic range gather applies verbatim
+        return dsl.range_query(state, lo, hi, max_out)
+
+    def stats(self, state):
+        return {"size": (state.n_term - state.n_marked).astype(jnp.int64),
+                "tombstones": state.n_marked.astype(jnp.int64),
+                "capacity": jnp.int64(state.term_keys.shape[0])}
+
+
+class _Unordered:
+    ordered = False
+
+    def scan(self, state, lo, hi, max_out: int):
+        raise NotImplementedError(
+            f"{self.name} is unordered: no range scan (pick an ordered "
+            f"backend or the tiered hash+skiplist stack)")
+
+
+class FixedHashBackend(_Unordered):
+    name = "fixed_hash"
+
+    def init(self, capacity: int, bucket: int = 16, **kw):
+        return ht.fixed_init(_pow2(max(capacity // bucket, 1)), bucket)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(state, plan, ht.fixed_insert, ht.fixed_delete,
+                                ht.fixed_find, EMPTY)
+
+    def stats(self, state):
+        return {"size": state.count.astype(jnp.int64),
+                "capacity": jnp.int64(state.keys.size)}
+
+
+class TwoLevelHashBackend(_Unordered):
+    name = "twolevel_hash"
+
+    def init(self, capacity: int, b1: int = 8, m2: int = 16, b2: int = 8,
+             pool_blocks: int | None = None, **kw):
+        m1 = _pow2(max(capacity // (2 * b1), 1))
+        if pool_blocks is None:
+            # default: every L1 slot can expand once (threshold expansion
+            # must be able to absorb overflow on ALL slots — paper table V)
+            pool_blocks = max(m1, 8)
+        return ht.twolevel_init(m1, b1, m2, b2, pool_blocks)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(state, plan, ht.twolevel_insert,
+                                ht.twolevel_delete, ht.twolevel_find, EMPTY)
+
+    def stats(self, state):
+        return {"size": state.count.astype(jnp.int64),
+                "capacity": jnp.int64(state.l1_keys.size + state.l2_keys.size),
+                "l2_tables": jnp.sum(state.l2_block >= 0).astype(jnp.int64)}
+
+
+class SplitOrderBackend(_Unordered):
+    name = "splitorder"
+
+    def init(self, capacity: int, seed_slots: int = 4, max_load: int = 16, **kw):
+        return so.splitorder_init(capacity, seed_slots, max_load)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(state, plan, so.splitorder_insert,
+                                so.splitorder_delete, so.splitorder_find,
+                                KEY_INF)
+
+    def stats(self, state):
+        return {"size": state.n.astype(jnp.int64),
+                "capacity": jnp.int64(state.rk.shape[0]),
+                "slots": state.n_slots.astype(jnp.int64)}
+
+
+class TwoLevelSplitOrderBackend(_Unordered):
+    name = "twolevel_splitorder"
+
+    def init(self, capacity: int, num_tables: int = 8, seed_slots: int = 2,
+             max_load: int = 16, **kw):
+        per_table = max(capacity // num_tables, 16)
+        return so.twolevel_splitorder_init(num_tables, per_table, seed_slots,
+                                           max_load)
+
+    def apply(self, state, plan: OpPlan):
+        return apply_linearized(state, plan, so.twolevel_splitorder_insert,
+                                so.twolevel_splitorder_delete,
+                                so.twolevel_splitorder_find, KEY_INF)
+
+    def stats(self, state):
+        return {"size": jnp.sum(state.n).astype(jnp.int64),
+                "capacity": jnp.int64(state.rk.size),
+                "slots": jnp.sum(state.n_slots).astype(jnp.int64)}
+
+
+DET_SKIPLIST = register(DetSkiplistBackend())
+RAND_SKIPLIST = register(RandSkiplistBackend())
+FIXED_HASH = register(FixedHashBackend())
+TWOLEVEL_HASH = register(TwoLevelHashBackend())
+SPLITORDER = register(SplitOrderBackend())
+TWOLEVEL_SPLITORDER = register(TwoLevelSplitOrderBackend())

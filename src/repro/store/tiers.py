@@ -1,0 +1,152 @@
+"""Hierarchical tier stack: hot fixed-slot hash in front of an ordered
+skiplist (the paper's closing proposal, §IX: "hierarchical usage of
+concurrent data structures ... reduces memory accesses from remote NUMA
+nodes").
+
+Layout invariant: every live key resides in EXACTLY ONE tier. The hot tier
+is a small fixed-slot table (one VMEM-tile row per bucket — the constant-cost
+fast path); the cold tier is the deterministic skiplist (ordered, large).
+
+Batched movement between tiers, all inside one `apply` (jit-able, no host
+round trips):
+  * spill     — insert lanes whose hot bucket is full fall through to cold
+  * promotion — FIND lanes served by the cold tier are re-inserted into the
+                hot tier (when bucket space allows) and deleted from cold,
+                so repeated hot-set accesses migrate up, batch by batch
+  * flush     — explicit bulk demotion of the whole hot tier into cold
+                (used before ordered bulk work, checkpoint compaction, ...)
+
+Linearization matches every flat backend: INSERTS -> DELETES -> FINDS, first
+lane wins on duplicates. Promotion runs after FINDS and is membership-neutral,
+so results are bit-identical to the flat `det_skiplist` backend — asserted by
+`examples/kvstore_service.py` and `tests/test_store_api.py`.
+
+`scan` stays exact: counts merge the cold range count with a hot-tier
+in-range reduction, and materialized rows are the sorted union of both tiers
+(truncated at max_out, same contract as the flat ordered backends).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import det_skiplist as dsl
+from repro.core import hashtable as ht
+from repro.core.bits import EMPTY, KEY_INF
+from repro.store.api import OP_DELETE, OP_FIND, OP_INSERT, OpPlan, register
+from repro.store.backends import _pow2, finalize_results
+
+
+class TierState(NamedTuple):
+    hot: ht.FixedHash     # small fixed-slot table (the near/fast tier)
+    cold: dsl.DetSkiplist  # ordered backing store (the far/large tier)
+
+
+class TieredBackend:
+    """`hash+skiplist`: hot fixed-hash tier over a det-skiplist cold tier."""
+
+    name = "hash+skiplist"
+    ordered = True
+
+    def __init__(self, promote: bool = True):
+        self.promote = promote
+
+    def init(self, capacity: int, hot_bucket: int = 8, hot_frac: int = 8,
+             **kw) -> TierState:
+        """Cold tier sized at `capacity`; hot tier at ~capacity/hot_frac."""
+        hot_slots = _pow2(max(capacity // (hot_frac * hot_bucket), 1))
+        return TierState(hot=ht.fixed_init(hot_slots, hot_bucket),
+                         cold=dsl.skiplist_init(capacity))
+
+    # -- apply ---------------------------------------------------------------
+
+    def apply(self, state: TierState, plan: OpPlan):
+        hot, cold = state.hot, state.cold
+        ops, keys, vals = plan.ops, plan.keys, plan.vals
+        valid = plan.mask & (ops >= 0)
+        ins_m = valid & (ops == OP_INSERT)
+        del_m = valid & (ops == OP_DELETE)
+        qk = jnp.where(valid, keys, KEY_INF)
+
+        # INSERTS: insert-if-absent across BOTH tiers; try hot first, spill
+        # bucket-full lanes down to cold (the batched spill path)
+        in_cold, _, _ = dsl.find_batch(cold, jnp.where(ins_m, keys, KEY_INF))
+        hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals,
+                                               ins_m & ~in_cold)
+        spill = ins_m & ~in_cold & ~ins_hot & ~ex_hot
+        cold, ins_cold, ex_cold = dsl.insert_batch(cold, keys, vals, spill)
+        inserted = ins_hot | ins_cold
+        existed = ex_hot | in_cold | ex_cold
+
+        # DELETES: the single-tier invariant means exactly one tier can hit
+        hot, del_hot = ht.fixed_delete(hot, keys, del_m)
+        cold, del_cold = dsl.delete_batch(cold, keys, del_m & ~del_hot)
+        deleted = del_hot | del_cold
+
+        # FINDS observe the post-update state of both tiers
+        f_hot, v_hot = ht.fixed_find(hot, qk)
+        f_cold, v_cold, _ = dsl.find_batch(cold, qk)
+        found = f_hot | f_cold
+        fvals = jnp.where(f_hot, v_hot, v_cold)
+
+        # PROMOTION (after the linearization point; membership-neutral):
+        # cold-served FIND lanes migrate to the hot tier when space allows
+        if self.promote:
+            prom = valid & (ops == OP_FIND) & f_cold & ~f_hot
+            hot, prom_ok, _ = ht.fixed_insert(hot, keys, v_cold, prom)
+            cold, _ = dsl.delete_batch(cold, keys, prom & prom_ok)
+
+        return TierState(hot=hot, cold=cold), finalize_results(
+            ops, valid, found, fvals, inserted, existed, deleted)
+
+    # -- ordered scan over both tiers ----------------------------------------
+
+    def scan(self, state: TierState, lo, hi, max_out: int):
+        cnt_c, k_c, v_c, val_c = dsl.range_query(state.cold, lo, hi, max_out)
+        hk = state.hot.keys.reshape(-1)
+        hv = state.hot.vals.reshape(-1)
+        in_range = (hk[None, :] >= lo[:, None]) & (hk[None, :] < hi[:, None]) \
+            & (hk[None, :] != EMPTY)
+        count = cnt_c + jnp.sum(in_range, axis=1).astype(cnt_c.dtype)
+
+        # materialize the sorted union, truncated at max_out: sort the hot
+        # in-range entries per query, then merge with the cold slice
+        sk = jnp.where(in_range, hk[None, :], KEY_INF)        # [Q, H]
+        oh = jnp.argsort(sk, axis=1)[:, :max_out]
+        hkeys = jnp.take_along_axis(sk, oh, axis=1)
+        hvals = jnp.take_along_axis(
+            jnp.broadcast_to(hv[None, :], sk.shape), oh, axis=1)
+        ck = jnp.where(val_c, k_c, KEY_INF)
+        allk = jnp.concatenate([ck, hkeys], axis=1)           # [Q, 2*max_out]
+        allv = jnp.concatenate([jnp.where(val_c, v_c, jnp.uint64(0)), hvals],
+                               axis=1)
+        om = jnp.argsort(allk, axis=1)[:, :max_out]
+        keys = jnp.take_along_axis(allk, om, axis=1)
+        vals = jnp.take_along_axis(allv, om, axis=1)
+        return count, keys, vals, keys != KEY_INF
+
+    # -- movement / stats ----------------------------------------------------
+
+    def flush(self, state: TierState) -> TierState:
+        """Bulk demotion: move every hot entry into the cold tier."""
+        hk = state.hot.keys.reshape(-1)
+        hv = state.hot.vals.reshape(-1)
+        cold, _, _ = dsl.insert_batch(state.cold, hk, hv, hk != EMPTY)
+        hot = state.hot._replace(keys=jnp.full_like(state.hot.keys, EMPTY),
+                                 vals=jnp.zeros_like(state.hot.vals),
+                                 count=state.hot.count * 0)
+        return TierState(hot=hot, cold=cold)
+
+    def stats(self, state: TierState):
+        hot_size = state.hot.count.astype(jnp.int64)
+        cold_size = (state.cold.n_term - state.cold.n_marked).astype(jnp.int64)
+        return {"size": hot_size + cold_size,
+                "hot_size": hot_size,
+                "cold_size": cold_size,
+                "tombstones": state.cold.n_marked.astype(jnp.int64),
+                "capacity": jnp.int64(state.hot.keys.size
+                                      + state.cold.term_keys.shape[0])}
+
+
+HASH_SKIPLIST = register(TieredBackend())

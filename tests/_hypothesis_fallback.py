@@ -1,0 +1,107 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+Implements the tiny subset this suite uses — `given`, `settings`, and the
+strategies `integers`, `booleans`, `sampled_from`, `lists`, `tuples` — with
+seeded-RNG example generation (seed = hash of the test's qualname), so the
+property tests still execute real randomized examples, reproducibly, in
+environments without hypothesis. Install `hypothesis` (requirements-dev.txt)
+to get full shrinking/coverage; this fallback trades example count for a
+dependency-free tier-1 run.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+# fallback example count: small (examples dominate tier-1 runtime: every new
+# list length is a fresh jit specialization); hypothesis, when present, uses
+# the test's own @settings instead
+MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def integers(min_value=0, max_value=1 << 30) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value,
+                                                  endpoint=True)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10,
+          unique=False) -> _Strategy:
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size, endpoint=True))
+        out, seen, tries = [], set(), 0
+        while len(out) < n and tries < 50 * (n + 1):
+            v = elements.example(rng)
+            tries += 1
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+    return _Strategy(sample)
+
+
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+class strategies:
+    """Namespace mirror so `from _hypothesis_fallback import strategies as st`
+    matches `from hypothesis import strategies as st`."""
+    integers = staticmethod(integers)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+
+
+def settings(max_examples=None, deadline=None, **kw):
+    """Records max_examples on the (already given-wrapped) test function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy, **kwstrats: _Strategy):
+    """Run the test body over deterministic seeded examples."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            declared = getattr(wrapper, "_fallback_max_examples", None)
+            n = min(declared or MAX_EXAMPLES, MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.adler32(fn.__qualname__.encode()))
+            for _ in range(n):
+                ex = [s.example(rng) for s in strats]
+                kex = {k: s.example(rng) for k, s in kwstrats.items()}
+                fn(*args, *ex, **kwargs, **kex)
+
+        # hide strategy-supplied parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[: len(params) - len(strats)] if strats else params
+        keep = [p for p in keep if p.name not in kwstrats]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return deco

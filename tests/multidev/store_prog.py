@@ -1,9 +1,12 @@
-"""Multi-device validation program for the sharded ordered store.
+"""Multi-device validation program for the sharded store engine.
 
 Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 by
 tests/test_routing_store.py. Builds a (2, 4) ("pod", "data") mesh — a
-miniature of the production (2, 16, 16) — applies random batched ops through
-the hierarchical router and checks every result against a global dict model.
+miniature of the production (2, 16, 16) — and, for EVERY backend listed in
+BACKENDS (flat skiplist, hash tables, split-order, and the tiered
+hash+skiplist stack), applies random batched ops through the hierarchical
+router and checks every result against a global dict model. The uniform
+`repro.store` protocol is what lets one program validate all of them.
 Exits 0 on success.
 """
 import os
@@ -14,26 +17,23 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import repro  # noqa: F401,E402
-from repro.core.ordered_sharded import (OP_DELETE, OP_FIND, OP_INSERT,  # noqa: E402
-                                        make_store_step, sharded_store_init)
+from repro.store import OP_DELETE, OP_FIND, OP_INSERT  # noqa: E402
+from repro.store.engine import StoreEngine  # noqa: E402
 
 AXES = ("pod", "data")
 LANES = 16
 N_SHARDS = 8
-ROUNDS = 6
+ROUNDS = 4
+BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist")
 
 
-def main() -> int:
-    mesh = jax.make_mesh((2, 4), AXES)
-    state = sharded_store_init(N_SHARDS, capacity_per_shard=512)
-    sharding = NamedSharding(mesh, P(AXES))
-    state = jax.device_put(state, NamedSharding(mesh, P(AXES)))
-    step = jax.jit(make_store_step(mesh, AXES, LANES, pool_factor=4))
+def check_backend(mesh, backend: str) -> None:
+    eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=4)
+    state = jax.device_put(eng.init(512), eng.sharding)
 
     rng = np.random.default_rng(42)
     model: dict[int, int] = {}
@@ -49,10 +49,10 @@ def main() -> int:
             keys[: len(reuse)] = reuse
         vals = keys + 1
 
-        ops_d = jax.device_put(jnp.asarray(ops), sharding)
-        keys_d = jax.device_put(jnp.asarray(keys), sharding)
-        vals_d = jax.device_put(jnp.asarray(vals), sharding)
-        state, res, ok, dropped = step(state, ops_d, keys_d, vals_d)
+        ops_d = jax.device_put(jnp.asarray(ops), eng.sharding)
+        keys_d = jax.device_put(jnp.asarray(keys), eng.sharding)
+        vals_d = jax.device_put(jnp.asarray(vals), eng.sharding)
+        state, res, ok, dropped = eng.step(state, ops_d, keys_d, vals_d)
         res, ok = np.asarray(res), np.asarray(ok)
         assert int(dropped) == 0, f"capacity drops: {int(dropped)}"
 
@@ -70,10 +70,48 @@ def main() -> int:
             k = int(keys[i])
             if ops[i] == OP_FIND:
                 want = k in model
-                assert bool(ok[i]) == want, (rnd, i, k, "find flag")
+                assert bool(ok[i]) == want, (backend, rnd, i, k, "find flag")
                 if want:
-                    assert int(res[i]) == model[k], (rnd, i, k, "find val")
-    print(f"STORE-OK rounds={ROUNDS} model_size={len(model)}")
+                    assert int(res[i]) == model[k], (backend, rnd, i, k,
+                                                     "find val")
+
+    # uniform stats accessor: global live size must match the model
+    sizes = eng.stats(state)["size"]
+    assert int(sizes.sum()) == len(model), (backend, sizes, len(model))
+    print(f"STORE-OK backend={backend} rounds={ROUNDS} "
+          f"model_size={len(model)}")
+
+
+def check_range(mesh, backend: str) -> None:
+    """Cross-shard range counting on an ordered backend (all_gather + psum)."""
+    eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=4)
+    state = jax.device_put(eng.init(1024), eng.sharding)
+    put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+    rng = np.random.default_rng(9)
+    keys = rng.integers(1, 2**63, N_SHARDS * LANES, dtype=np.uint64)
+    state, _, ok, dropped = eng.step(
+        state, put(np.full(keys.size, OP_INSERT, np.int32)), put(keys),
+        put(keys + 1))
+    assert np.asarray(ok).all() and int(dropped) == 0
+    rstep = eng.range_step(max_out=keys.size)
+    ks = np.sort(np.unique(keys))
+    los = np.zeros(keys.size, np.uint64)
+    his = np.zeros(keys.size, np.uint64)
+    valid = np.zeros(keys.size, bool)
+    los[0], his[0], valid[0] = 0, np.uint64(2**63), True      # everything
+    los[1], his[1], valid[1] = ks[10], ks[50], True           # 40 keys
+    cnt = np.asarray(rstep(state, put(los), put(his), put(valid)))
+    assert int(cnt[0]) == len(ks), cnt[0]
+    assert int(cnt[1]) == 40, cnt[1]
+    print(f"RANGE-OK backend={backend} counts={cnt[:2]}")
+
+
+def main() -> int:
+    mesh = jax.make_mesh((2, 4), AXES)
+    for backend in BACKENDS:
+        check_backend(mesh, backend)
+    for backend in ("det_skiplist", "hash+skiplist"):
+        check_range(mesh, backend)
     return 0
 
 

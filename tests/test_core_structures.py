@@ -7,7 +7,11 @@ detection, split-order zero-movement growth).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # deterministic fallback (seeded examples)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import jax.numpy as jnp
 

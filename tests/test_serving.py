@@ -156,6 +156,11 @@ class TestPrefixSharing:
 
 class TestEngineE2E:
     def test_engine_matches_contiguous_reference(self, cfg):
+        # f32 compute: greedy-argmax sequences are only comparable between
+        # the paged and contiguous paths when top-2 logit margins exceed the
+        # reduction-order noise — under bf16 that noise (~6e-3) occasionally
+        # beats a near-tie margin and flips a token
+        cfg = cfg.replace(compute_dtype="float32")
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         rng = np.random.default_rng(1)
         prompts = [rng.integers(1, cfg.vocab_size, n) for n in (8, 12, 8, 16)]
