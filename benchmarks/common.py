@@ -1,13 +1,20 @@
-"""Shared benchmark harness: timing, CSV emission, workload scaling.
+"""Shared benchmark harness: timing, CSV + machine-readable JSON emission.
 
 Paper workloads are 10m-1b ops on a 128-core Milan node; this container is a
 1-core CPU running JAX, so workloads scale down (SCALE notes the factor per
 table) while preserving every comparison's STRUCTURE (thread count -> batch
 width, implementation pairs, workload mixes). Times are wall-clock over
 jitted steps after warmup.
+
+Tables record through a `Recorder`, which prints the historical
+``name,us_per_call,derived`` CSV lines AND collects typed rows; when given
+an output directory it writes ``BENCH_<table>.json`` (rows + platform
+metadata) — the artifact CI uploads and trend tooling consumes.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -30,6 +37,45 @@ def bench(fn, *args, iters: int = 5, warmup: int = 2):
 
 def emit(name: str, seconds_per_call: float, derived: str):
     print(f"{name},{seconds_per_call * 1e6:.1f},{derived}", flush=True)
+
+
+class Recorder:
+    """Collects benchmark rows for one table; CSV to stdout, JSON to disk."""
+
+    def __init__(self, table: str):
+        self.table = table
+        self.rows: list[dict] = []
+
+    def record(self, name: str, seconds_per_call: float, **derived):
+        """One measurement. `derived` values should be plain numbers/strings
+        (they go into the JSON verbatim and into the CSV `derived` column)."""
+        emit(name, seconds_per_call,
+             ";".join(f"{k}={v}" for k, v in derived.items()))
+        self.rows.append({"name": name,
+                          "us_per_call": seconds_per_call * 1e6,
+                          **derived})
+
+    def write_json(self, out_dir: str) -> str:
+        """Write BENCH_<table>.json under `out_dir`; returns the path."""
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{self.table}.json")
+        payload = {
+            "table": self.table,
+            "jax_backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "unix_time": time.time(),
+            "rows": self.rows,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path} ({len(self.rows)} rows)", flush=True)
+        return path
+
+
+def finish(rec: Recorder, out_dir: str | None):
+    """Shared tail of every ported table's `run(out_dir=...)`."""
+    if out_dir:
+        rec.write_json(out_dir)
 
 
 def keys64(rng, n):

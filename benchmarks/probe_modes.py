@@ -1,0 +1,61 @@
+"""Execution-layer probe benchmark: jnp reference vs Pallas kernel timings
+for the two kernelized probes (deterministic-skiplist search, fixed-hash
+bucket probe), across every runnable `repro.store.exec` mode.
+
+On CPU, `interpret` measures the Pallas interpreter (a correctness path, so
+it is expected to LOSE to jnp — the number documents the overhead); on TPU
+the `pallas` rows are the production hot path. Results are bit-identical in
+every mode by contract, so these rows are a pure perf comparison.
+
+`run(out_dir=...)` writes machine-readable BENCH_probe_modes.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Recorder, bench, finish, keys64
+from repro.core import det_skiplist as dsl
+from repro.core import hashtable as ht
+from repro.store import exec as exec_
+
+CAP = 1 << 13
+PRELOAD = CAP // 2
+QUERIES = 1024
+HASH_SLOTS = 1 << 9
+BUCKET = 8
+
+
+def run(out_dir: str | None = None):
+    rec = Recorder("probe_modes")
+    rng = np.random.default_rng(7)
+    modes = exec_.runnable_modes()
+
+    # deterministic skiplist: preload, then time the batched FIND per mode
+    base = keys64(rng, PRELOAD)
+    s = dsl.skiplist_init(CAP)
+    s, _, _ = dsl.insert_batch(s, base, base)
+    queries = keys64(rng, QUERIES // 2)
+    queries = jax.numpy.concatenate([base[: QUERIES // 2], queries])
+    for mode in modes:
+        fn = jax.jit(lambda st, q, m=mode: exec_.skiplist_find(st, q, m)[0])
+        t = bench(lambda: fn(s, queries))
+        rec.record(f"probe/skiplist_find/mode={mode}", t / QUERIES,
+                   ops_per_sec=QUERIES / t, queries=QUERIES,
+                   preload=PRELOAD, mode=mode)
+
+    # fixed-slot hash: half the queries hit, half miss
+    h = ht.fixed_init(HASH_SLOTS, BUCKET)
+    hk = keys64(rng, HASH_SLOTS * BUCKET // 2)
+    h, _, _ = ht.fixed_insert(h, hk, hk)
+    hq = jax.numpy.concatenate([hk[: QUERIES // 2],
+                                keys64(rng, QUERIES // 2)])
+    for mode in modes:
+        fn = jax.jit(lambda st, q, m=mode: exec_.hash_find(st, q, m)[0])
+        t = bench(lambda: fn(h, hq))
+        rec.record(f"probe/hash_find/mode={mode}", t / QUERIES,
+                   ops_per_sec=QUERIES / t, queries=QUERIES,
+                   slots=HASH_SLOTS, bucket=BUCKET, mode=mode)
+
+    finish(rec, out_dir)
+    return rec

@@ -5,21 +5,25 @@ threads -> batch lanes. Three implementations:
   serial    — one-op-at-a-time lax.scan (the coarse-lock/Boost analogue)
   py_deque  — host Python deque (the non-vectorized reference)
 Workload: alternating push/pop rounds, ~50/50, total_ops per measurement.
+
+Runs on the shared `benchmarks.common` harness; `run(out_dir=...)` writes
+machine-readable BENCH_table1_queues.json.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench, emit
+from benchmarks.common import Recorder, bench, finish
 from repro.core.ringqueue import pop_batch, push_batch, queue_init
 
 TOTAL_OPS = 1 << 17        # scaled from the paper's 100m (x~760 down)
 LANES = [4, 8, 16, 32, 64, 128]
+ROUNDS = 64
 
 
-def run():
+def run(out_dir: str | None = None):
+    rec = Recorder("table1_queues")
     for lanes in LANES:
         q0 = queue_init(max_blocks=64, block_size=1024)
         vals = jnp.arange(lanes, dtype=jnp.uint64)
@@ -31,17 +35,15 @@ def run():
             q, _, _ = pop_batch(q, lanes)
             return q
 
-        rounds = TOTAL_OPS // (2 * lanes)
-
         def run_rounds(q):
-            for _ in range(64):
+            for _ in range(ROUNDS):
                 q = round_(q)
             return q
 
         t = bench(run_rounds, q0, iters=3)
-        per_op = t / (64 * 2 * lanes)
-        emit(f"table1/lkfree/threads={lanes}", per_op,
-             f"ops_per_sec={1.0/per_op:.3e};total_ops={TOTAL_OPS}")
+        per_op = t / (ROUNDS * 2 * lanes)
+        rec.record(f"table1/lkfree/threads={lanes}", per_op,
+                   ops_per_sec=1.0 / per_op, total_ops=ROUNDS * 2 * lanes)
 
     # serialized (one op per device step) — the contended-lock analogue
     q0 = queue_init(max_blocks=64, block_size=1024)
@@ -53,13 +55,14 @@ def run():
         return q
 
     def run_serial(q):
-        for _ in range(64):
+        for _ in range(ROUNDS):
             q = serial_round(q)
         return q
 
     t = bench(run_serial, q0, iters=3)
-    per_op = t / (64 * 2)
-    emit("table1/serial/threads=1", per_op, f"ops_per_sec={1.0/per_op:.3e}")
+    per_op = t / (ROUNDS * 2)
+    rec.record("table1/serial/threads=1", per_op, ops_per_sec=1.0 / per_op,
+               total_ops=ROUNDS * 2)
 
     # host deque reference
     from collections import deque
@@ -70,4 +73,6 @@ def run():
         d.append(i)
         d.popleft()
     t = (_t.perf_counter() - t0) / TOTAL_OPS
-    emit("table1/py_deque/threads=1", t, f"ops_per_sec={1.0/t:.3e}")
+    rec.record("table1/py_deque/threads=1", t, ops_per_sec=1.0 / t)
+    finish(rec, out_dir)
+    return rec

@@ -5,7 +5,10 @@ Paper (CPU, locks): randomized wins (no rebalancing, lock-free).
 Here (SIMD lanes): the deterministic fan-out-4 probe is one fixed-shape
 gather per level; the randomized variant pads every lane to MAX_GAP probes.
 We measure batched find + insert throughput and report the probe-width
-ratio as `derived` context.
+ratio as derived context.
+
+Runs on the shared `benchmarks.common` harness; `run(out_dir=...)` writes
+machine-readable BENCH_table4_det_vs_rand.json.
 """
 from __future__ import annotations
 
@@ -13,17 +16,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench, emit, keys64
+from benchmarks.common import Recorder, bench, finish, keys64
 from repro.core import rand_skiplist as rsl
 from repro.core.det_skiplist import find_batch, insert_batch, skiplist_init
 
 CAP = 1 << 14
 PRELOAD = CAP // 2
 LANES = [8, 32, 128, 512]
-ROUNDS = 8
 
 
-def run():
+def run(out_dir: str | None = None):
+    rec = Recorder("table4_det_vs_rand")
     rng = np.random.default_rng(1)
     base = keys64(rng, PRELOAD)
 
@@ -40,11 +43,11 @@ def run():
 
         t_d = bench(lambda: df(det, queries))
         t_r = bench(lambda: rf(rnd, queries))
-        emit(f"table4/det_find/threads={lanes}", t_d / lanes,
-             f"ops_per_sec={lanes/t_d:.3e};probe_width=4")
-        emit(f"table4/rand_find/threads={lanes}", t_r / lanes,
-             f"ops_per_sec={lanes/t_r:.3e};probe_width={rsl.MAX_GAP};"
-             f"speedup_det={t_r/t_d:.2f}x")
+        rec.record(f"table4/det_find/threads={lanes}", t_d / lanes,
+                   ops_per_sec=lanes / t_d, probe_width=4)
+        rec.record(f"table4/rand_find/threads={lanes}", t_r / lanes,
+                   ops_per_sec=lanes / t_r, probe_width=rsl.MAX_GAP,
+                   speedup_det=t_r / t_d)
 
     # bulk insert comparison (rebalance cost vs level re-derivation)
     newk = keys64(rng, 256)
@@ -52,7 +55,9 @@ def run():
     ri = jax.jit(lambda s, k: rsl.insert_batch(s, k, k)[0])
     t_d = bench(lambda: di(det, newk))
     t_r = bench(lambda: ri(rnd, newk))
-    emit("table4/det_insert/batch=256", t_d / 256,
-         f"ops_per_sec={256/t_d:.3e}")
-    emit("table4/rand_insert/batch=256", t_r / 256,
-         f"ops_per_sec={256/t_r:.3e};det_speedup={t_r/t_d:.2f}x")
+    rec.record("table4/det_insert/batch=256", t_d / 256,
+               ops_per_sec=256 / t_d)
+    rec.record("table4/rand_insert/batch=256", t_r / 256,
+               ops_per_sec=256 / t_r, det_speedup=t_r / t_d)
+    finish(rec, out_dir)
+    return rec

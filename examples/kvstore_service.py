@@ -9,9 +9,12 @@ string: the deterministic skiplist, the two-level hash, the split-order
 table, and the hierarchical hash+skiplist tier stack all serve the exact
 same workload here — and the deterministic linearization makes their
 find/insert/delete results bit-identical, which this example asserts.
+The probe execution layer is a second config knob: the tiered backend is
+re-run with its FIND phases on the Pallas kernels (interpret mode on CPU)
+and must reproduce the jnp results bit-for-bit.
 
 Run: PYTHONPATH=src python examples/kvstore_service.py [backend ...]
-     (no args: run all of BACKENDS and cross-check)
+     (no args: run all of BACKENDS, cross-check, then cross-check exec modes)
 """
 import os
 import sys
@@ -49,9 +52,10 @@ def workload(n_rounds: int, total: int, seed: int = 0):
     return rounds
 
 
-def run_backend(name: str, rounds) -> list:
+def run_backend(name: str, rounds, exec_mode: str | None = None) -> list:
     mesh = jax.make_mesh((2, 4), AXES)
-    eng = StoreEngine(mesh, AXES, LANES, backend=name, pool_factor=4)
+    eng = StoreEngine(mesh, AXES, LANES, backend=name, pool_factor=4,
+                      exec_mode=exec_mode)
     state = jax.device_put(eng.init(4096), eng.sharding)
     put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
 
@@ -70,7 +74,7 @@ def run_backend(name: str, rounds) -> list:
     print(f"  [{name}] per-shard live sizes (top-3-bit key partition): "
           f"{stats['size']}")
     extra = {k: v.sum() for k, v in stats.items()
-             if k not in ("size", "capacity")}
+             if k not in ("size", "capacity") and int(v.sum())}
     if extra:
         print(f"  [{name}] totals: " + ", ".join(
             f"{k}={int(v)}" for k, v in sorted(extra.items())))
@@ -95,6 +99,18 @@ def main():
                 assert (res_a == res_b).all(), (ref_name, name, r, "vals")
         print(f"all {len(results)} backends produced identical results "
               f"({len(rounds)} rounds x {8 * LANES} lanes)")
+
+    # execution-layer parity: the tiered stack with its probes on the Pallas
+    # kernels (interpret on CPU) must reproduce the jnp results bit-for-bit
+    if "hash+skiplist" in results:
+        kernelized = run_backend("hash+skiplist", rounds,
+                                 exec_mode="interpret")
+        for r, ((ok_a, res_a), (ok_b, res_b)) in enumerate(
+                zip(results["hash+skiplist"], kernelized)):
+            assert (ok_a == ok_b).all(), ("exec-mode", r, "ok")
+            assert (res_a == res_b).all(), ("exec-mode", r, "vals")
+        print("exec modes jnp and interpret produced identical results "
+              "(hash+skiplist, kernelized hot-tier probe)")
 
 
 if __name__ == "__main__":

@@ -83,6 +83,9 @@ class ModelConfig:
     store_backend: str = "det_skiplist"  # any repro.store registry name
                                          # (e.g. twolevel_hash, splitorder,
                                          # hash+skiplist tier stack)
+    store_exec: str = "jnp"              # probe execution mode (store.exec):
+                                         # jnp | interpret | pallas —
+                                         # bit-identical results, perf knob
 
     @property
     def resolved_head_dim(self) -> int:

@@ -19,3 +19,8 @@ def reduced():
 def tiered():
     """The §IX hierarchical composition on the same shapes."""
     return CONFIG.replace(store_backend="hash+skiplist")
+
+def kernelized(mode: str = "pallas"):
+    """Probe phases through the Pallas execution layer ("interpret" on CPU);
+    results are bit-identical to the jnp default — a pure perf knob."""
+    return CONFIG.replace(store_backend="hash+skiplist", store_exec=mode)

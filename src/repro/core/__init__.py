@@ -1,6 +1,9 @@
 """Core data structures — the paper's contribution, TPU-native.
 
 bits          key packing, splitmix64, bit reversal, geometric heights
+layout        shared flat-memory layout layer: (hi, lo) u32 key planes,
+              kv/block array allocation, level-major skiplist + bucket-major
+              hash layouts — the shapes `repro.kernels.*` consume
 blockpool     §V memory manager: id pool + free ring + ABA generations
 ringqueue     §III LCRQ-adapted block queue with recycling
 det_skiplist  §II deterministic 1-2-3-4 skiplist (the primary contribution)

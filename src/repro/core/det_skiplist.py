@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF, dup_in_run
+from repro.core.layout import kv_arrays
 
 FANOUT = 4  # 1-2-3-4: arity in [2, 4]
 
@@ -78,9 +79,10 @@ def _level_caps(capacity: int) -> list[int]:
 
 def skiplist_init(capacity: int) -> DetSkiplist:
     caps = _level_caps(capacity)
+    term_keys, term_vals = kv_arrays(capacity)
     return DetSkiplist(
-        term_keys=jnp.full((capacity,), KEY_INF),
-        term_vals=jnp.zeros((capacity,), jnp.uint64),
+        term_keys=term_keys,
+        term_vals=term_vals,
         term_mark=jnp.zeros((capacity,), bool),
         n_term=jnp.int32(0),
         n_marked=jnp.int32(0),

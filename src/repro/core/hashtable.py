@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.bits import EMPTY, dup_in_run, hash64
 from repro.core.blockpool import BlockPool, blockpool_init, pool_alloc
+from repro.core.layout import block_arrays, hash_slot, is_pow2, kv_arrays
 
 
 def _lex_sort_slots_keys(slots: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
@@ -90,15 +91,14 @@ class FixedHash(NamedTuple):
 
 
 def fixed_init(num_slots: int, bucket: int) -> FixedHash:
-    assert num_slots & (num_slots - 1) == 0, "power-of-two slots (paper §VIII)"
-    return FixedHash(keys=jnp.full((num_slots, bucket), EMPTY),
-                     vals=jnp.zeros((num_slots, bucket), jnp.uint64),
-                     count=jnp.int64(0))
+    assert is_pow2(num_slots), "power-of-two slots (paper §VIII)"
+    keys, vals = kv_arrays((num_slots, bucket))
+    return FixedHash(keys=keys, vals=vals, count=jnp.int64(0))
 
 
 def _slot_of(h: FixedHash, keys: jnp.ndarray) -> jnp.ndarray:
     # s = H(k) mod M; M power of two -> low log(M) bits of the scrambled hash
-    return (hash64(keys) & jnp.uint64(h.num_slots - 1)).astype(jnp.int32)
+    return hash_slot(keys, h.num_slots)
 
 
 def fixed_insert(h: FixedHash, keys: jnp.ndarray, vals: jnp.ndarray,
@@ -187,13 +187,15 @@ class TwoLevelHash(NamedTuple):
 
 
 def twolevel_init(m1: int, b1: int, m2: int, b2: int, pool_blocks: int) -> TwoLevelHash:
-    assert m1 & (m1 - 1) == 0 and m2 & (m2 - 1) == 0
+    assert is_pow2(m1) and is_pow2(m2)
+    l1_keys, l1_vals = kv_arrays((m1, b1))
+    l2_keys, l2_vals = block_arrays(pool_blocks, (m2, b2))
     return TwoLevelHash(
-        l1_keys=jnp.full((m1, b1), EMPTY),
-        l1_vals=jnp.zeros((m1, b1), jnp.uint64),
+        l1_keys=l1_keys,
+        l1_vals=l1_vals,
         l2_block=jnp.full((m1,), -1, jnp.int32),
-        l2_keys=jnp.full((pool_blocks, m2, b2), EMPTY),
-        l2_vals=jnp.zeros((pool_blocks, m2, b2), jnp.uint64),
+        l2_keys=l2_keys,
+        l2_vals=l2_vals,
         pool=blockpool_init(pool_blocks),
         count=jnp.int64(0),
     )
@@ -202,8 +204,9 @@ def twolevel_init(m1: int, b1: int, m2: int, b2: int, pool_blocks: int) -> TwoLe
 def _slots12(h: TwoLevelHash, keys: jnp.ndarray):
     # lower log(M1) bits for L1, the NEXT log(M2) bits for L2 (paper §VIII)
     hv = hash64(keys)
-    s1 = (hv & jnp.uint64(h.m1 - 1)).astype(jnp.int32)
-    s2 = ((hv >> jnp.uint64(h.m1.bit_length() - 1)) & jnp.uint64(h.m2 - 1)).astype(jnp.int32)
+    s1 = hash_slot(hv, h.m1, prehashed=True)
+    s2 = ((hv >> jnp.uint64(h.m1.bit_length() - 1))
+          & jnp.uint64(h.m2 - 1)).astype(jnp.int32)
     return s1, s2
 
 

@@ -1,0 +1,165 @@
+"""Shared flat-memory layout layer (the paper's §V discipline, one module).
+
+The paper's performance numbers come from memory-layout discipline: nodes are
+pool-allocated in blocks, placed for cache/NUMA locality, and probed with
+constant-cost loops. Before this module each core structure carried its own
+ad-hoc arrays; now the conventions live in one place and the Pallas kernels
+(`repro.kernels.skiplist_search`, `repro.kernels.hash_probe`) consume exactly
+these layouts — the layout and the probe loop are co-designed, which is the
+whole trick (cf. "Skiplists with Foresight", locality-optimized B-skiplists).
+
+Conventions:
+
+* **Key/value/tombstone arrays** — keys are uint64 with `KEY_INF` padding
+  (`EMPTY` for hash slots is the same sentinel), values are uint64 zeros.
+  `kv_arrays` allocates the pair; every structure's init goes through it so
+  the padding contract has one source of truth.
+* **(hi, lo) u32 pairs** — TPU has no native u64 lanes, so kernels receive
+  keys as two u32 planes compared lexicographically (`key_leq`). This is the
+  hardware adaptation of the paper's 128-bit key|next atomic words.
+* **Level-major skiplist layout** — every index level is one contiguous row
+  of a `[L, C1]` stack (u32 hi/lo planes + int32 child starts), terminal
+  level as flat `[C]` planes + int8 marks. Whole-array BlockSpecs make the
+  entire index VMEM-resident: the CPU path through HBM pointer-land becomes
+  L on-chip hops.
+* **Bucket-major hash layout** — a bucket is one contiguous `[B]`-wide row
+  (`[M, B]` planes); one bucket = one VMEM tile row, compared in a single
+  vector op. `hash_slot` is the shared slot function (splitmix64, low bits).
+* **Pooled blocks** — `block_arrays` allocates `[P, ...]` pooled payload
+  arrays (two-level hash L2 tables, ring-queue blocks) matching the
+  `core.blockpool` id/generation allocator.
+
+Pure layout, no execution: the probe loops over these shapes live in
+`repro.kernels.*` and are dispatched by `repro.store.exec`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.bits import EMPTY, KEY_INF, hash64
+
+
+# ---------------------------------------------------------------------------
+# sizing helpers
+# ---------------------------------------------------------------------------
+
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= max(n, 1)."""
+    return 1 << max(int(n).bit_length() - 1, 0)
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and n & (n - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# flat key/value storage
+# ---------------------------------------------------------------------------
+
+def kv_arrays(shape, key_fill=KEY_INF):
+    """The shared (keys, vals) allocation: u64 keys filled with the sentinel
+    (KEY_INF == EMPTY), u64 zero values. Used by every structure's init."""
+    if isinstance(shape, int):
+        shape = (shape,)
+    return jnp.full(shape, key_fill), jnp.zeros(shape, jnp.uint64)
+
+
+def block_arrays(num_blocks: int, block_shape, key_fill=KEY_INF):
+    """Pooled `[P, ...]` key/value payload arrays for a `core.blockpool`
+    allocator of `num_blocks` ids (two-level hash L2 tables, queue blocks)."""
+    if isinstance(block_shape, int):
+        block_shape = (block_shape,)
+    return kv_arrays((num_blocks,) + tuple(block_shape), key_fill)
+
+
+# ---------------------------------------------------------------------------
+# the (hi, lo) u32 key convention
+# ---------------------------------------------------------------------------
+
+def split_u64(x: jnp.ndarray):
+    """u64 -> (hi u32, lo u32) planes — the kernel-side key representation."""
+    return ((x >> jnp.uint64(32)).astype(jnp.uint32),
+            (x & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32))
+
+
+def key_leq(qh, ql, kh, kl):
+    """Lexicographic (hi, lo) <= — bitwise-equal to u64 compare. The ONE
+    comparison every kernel uses, so parity with the u64 reference paths is
+    by construction."""
+    return (qh < kh) | ((qh == kh) & (ql <= kl))
+
+
+# ---------------------------------------------------------------------------
+# level-major skiplist layout (det_skiplist -> skiplist_search kernel)
+# ---------------------------------------------------------------------------
+
+class SkiplistLayout(NamedTuple):
+    """The deterministic skiplist as VMEM-tileable flat planes.
+
+    Levels are stacked bottom-up into one [L, C1] rectangle (C1 = widest
+    level's capacity, KEY_INF padding): row r holds level r's max-of-group
+    keys and child start indices. The terminal level stays flat [C]."""
+    lvl_hi: jnp.ndarray     # [L, C1] uint32
+    lvl_lo: jnp.ndarray     # [L, C1] uint32
+    lvl_child: jnp.ndarray  # [L, C1] int32 (group start in the level below)
+    term_hi: jnp.ndarray    # [C] uint32
+    term_lo: jnp.ndarray    # [C] uint32
+    term_mark: jnp.ndarray  # [C] int8 tombstones
+
+
+def skiplist_layout(s) -> SkiplistLayout:
+    """DetSkiplist (or any state with the same level_keys/level_child/
+    term_keys/term_mark fields) -> level-major kernel layout."""
+    c1 = s.level_keys[0].shape[0]
+    his, los, chs = [], [], []
+    for lk, lc in zip(s.level_keys, s.level_child):
+        pad = c1 - lk.shape[0]
+        lk = jnp.pad(lk, (0, pad), constant_values=KEY_INF)
+        lc = jnp.pad(lc, (0, pad))
+        h, l = split_u64(lk)
+        his.append(h)
+        los.append(l)
+        chs.append(lc.astype(jnp.int32))
+    th, tl = split_u64(s.term_keys)
+    return SkiplistLayout(lvl_hi=jnp.stack(his), lvl_lo=jnp.stack(los),
+                          lvl_child=jnp.stack(chs), term_hi=th, term_lo=tl,
+                          term_mark=s.term_mark.astype(jnp.int8))
+
+
+# ---------------------------------------------------------------------------
+# bucket-major hash layout (FixedHash -> hash_probe kernel)
+# ---------------------------------------------------------------------------
+
+class BucketLayout(NamedTuple):
+    """A fixed-slot table's keys as u32 planes: one bucket = one [B] row =
+    one VMEM tile row, probed in a single vector compare."""
+    key_hi: jnp.ndarray  # [M, B] uint32
+    key_lo: jnp.ndarray  # [M, B] uint32
+
+    @property
+    def num_slots(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def bucket(self) -> int:
+        return self.key_hi.shape[1]
+
+
+def bucket_layout(keys2d: jnp.ndarray) -> BucketLayout:
+    """[M, B] u64 bucket keys (FixedHash.keys, TwoLevelHash.l1_keys) ->
+    kernel layout."""
+    kh, kl = split_u64(keys2d)
+    return BucketLayout(key_hi=kh, key_lo=kl)
+
+
+def hash_slot(keys: jnp.ndarray, num_slots: int, *,
+              prehashed: bool = False) -> jnp.ndarray:
+    """The shared slot function: s = splitmix64(k) mod M, M a power of two.
+    Computed on the u64 host path and handed to kernels as int32 (TPU lanes
+    have no u64, so the scramble stays outside the kernel). Pass
+    `prehashed=True` when `keys` is already the scrambled hash (callers that
+    slice several bit fields out of one hash)."""
+    hv = keys.astype(jnp.uint64) if prehashed else hash64(keys)
+    return (hv & jnp.uint64(num_slots - 1)).astype(jnp.int32)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF, bitrev64, dup_in_run, hash64
+from repro.core.layout import is_pow2, kv_arrays
 
 _WINDOW = 4  # rk-collision scan width (64-bit hash collisions are ~0)
 
@@ -45,11 +46,12 @@ class SplitOrderHash(NamedTuple):
 
 
 def splitorder_init(capacity: int, seed_slots: int, max_load: int = 16) -> SplitOrderHash:
-    assert seed_slots & (seed_slots - 1) == 0
+    assert is_pow2(seed_slots)
+    keys, vals = kv_arrays(capacity)
     return SplitOrderHash(
         rk=jnp.full((capacity,), KEY_INF),
-        keys=jnp.full((capacity,), KEY_INF),
-        vals=jnp.zeros((capacity,), jnp.uint64),
+        keys=keys,
+        vals=vals,
         n=jnp.int32(0),
         n_slots=jnp.int32(seed_slots),
         max_load=max_load,
@@ -209,11 +211,12 @@ class TwoLevelSplitOrder(NamedTuple):
 
 def twolevel_splitorder_init(num_tables: int, capacity: int, seed_slots: int,
                              max_load: int = 16) -> TwoLevelSplitOrder:
-    assert num_tables & (num_tables - 1) == 0
+    assert is_pow2(num_tables)
+    keys, vals = kv_arrays((num_tables, capacity))
     return TwoLevelSplitOrder(
         rk=jnp.full((num_tables, capacity), KEY_INF),
-        keys=jnp.full((num_tables, capacity), KEY_INF),
-        vals=jnp.zeros((num_tables, capacity), jnp.uint64),
+        keys=keys,
+        vals=vals,
         n=jnp.zeros((num_tables,), jnp.int32),
         n_slots=jnp.full((num_tables,), seed_slots, jnp.int32),
         max_load=max_load,

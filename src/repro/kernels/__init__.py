@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas TPU kernels for the compute hot spots.
+
+Module map (each kernel is a package of three files — `kernel.py` the
+Pallas body + pallas_call wrapper, `ref.py` a pure-jnp oracle over the SAME
+layout, `ops.py` the state -> layout -> kernel adapter):
+
+flash_attention   tiled softmax(QK^T)V with online renormalization
+paged_attention   decode attention over block-paged KV cache pages
+selective_scan    chunked SSM recurrence (Mamba-style selective scan)
+skiplist_search   batched deterministic-skiplist FIND: the 1-2-3-4
+                  criterion's fixed L-level, fan-out-4 walk over the
+                  level-major layout (`core.layout.skiplist_layout`)
+hash_probe        batched fixed-hash bucket probe over the bucket-major
+                  layout (`core.layout.bucket_layout`) — the §IX hot-tier
+                  fast path
+
+The store kernels (skiplist_search, hash_probe) are never called directly
+by backends: `repro.store.exec` dispatches between them and their jnp
+references by execution mode (jnp | interpret | pallas), with bit-identical
+results guaranteed by tests/test_exec_modes.py. All kernels validate in
+interpret mode on CPU (tests/test_kernels.py); compiled mode targets TPU.
+
+Add a kernel ONLY for a hot spot the paper itself optimizes; keep the
+ref/ops/kernel split so the oracle and the layout adapter stay testable
+without TPU hardware. See docs/store_layers.md for the layout/execution/
+store layering.
+"""

@@ -1,0 +1,61 @@
+"""Batched fixed-hash bucket probe — Pallas TPU kernel.
+
+The hot-tier fast path of the §IX tier stack: a fixed-slot table whose
+buckets are contiguous [B]-wide rows (`repro.core.layout.BucketLayout`), the
+whole table VMEM-resident via whole-array BlockSpecs. One probe = one
+dynamic row gather + one vector compare across the bucket — the "constant
+cost per key" the paper wants, with the bucket row as the VMEM tile.
+
+TPU mapping:
+  * queries tile [T] per grid step; 64-bit keys travel as (hi, lo) u32
+    planes compared per-plane (equality, so no lexicographic carry needed).
+  * slot ids arrive precomputed as int32 (the splitmix64 scramble runs on
+    the u64 host path — TPU lanes have no u64; see `core.layout.hash_slot`).
+  * the bucket gather is a dynamic row gather of int32/u32 lanes (mosaic
+    dynamic_gather; validated in interpret mode on CPU).
+  * outputs are (found i8[T], col i32[T]); the value gather happens outside
+    the kernel where u64 lanes exist.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hp_kernel(qh_ref, ql_ref, slot_ref, kh_ref, kl_ref, found_ref, col_ref):
+    qh = qh_ref[...]
+    ql = ql_ref[...]
+    s = slot_ref[...]
+    t = qh.shape[0]
+    m, b = kh_ref.shape
+    s = jnp.clip(s, 0, m - 1)
+    rows_h = jnp.take(kh_ref[...], s, axis=0)          # [T, B] bucket gather
+    rows_l = jnp.take(kl_ref[...], s, axis=0)
+    hit = (rows_h == qh[:, None]) & (rows_l == ql[:, None])
+    found_ref[...] = jnp.any(hit, axis=1).astype(jnp.int8)
+    col_ref[...] = jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+
+def hash_probe_tiles(q_hi, q_lo, slots, key_hi, key_lo, *, tile: int = 256,
+                     interpret: bool = True):
+    """q_*: [T] u32; slots: [T] i32; key_*: [M, B] u32 (the bucket layout).
+    Returns (found i8[T], col i32[T])."""
+    t = q_hi.shape[0]
+    if t == 0:   # empty batch: same contract as the jnp reference
+        return (jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.int32))
+    tile = min(tile, t)
+    assert t % tile == 0
+    grid = (t // tile,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+    qspec = pl.BlockSpec((tile,), lambda g: (g,))
+    return pl.pallas_call(
+        _hp_kernel,
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, whole(key_hi), whole(key_lo)],
+        out_specs=[pl.BlockSpec((tile,), lambda g: (g,)),
+                   pl.BlockSpec((tile,), lambda g: (g,))],
+        out_shape=[jax.ShapeDtypeStruct((t,), jnp.int8),
+                   jax.ShapeDtypeStruct((t,), jnp.int32)],
+        interpret=interpret,
+    )(q_hi, q_lo, slots, key_hi, key_lo)

@@ -1,0 +1,41 @@
+"""Wrapper: FixedHash state -> shared bucket layout
+(`repro.core.layout.bucket_layout`) -> batched Pallas probe.
+
+`fixed_hash_find` is the unjitted entry the `repro.store.exec` dispatch
+layer calls from inside already-jitted store steps; `hash_probe` keeps a
+standalone jitted form with the contract of `core.hashtable.fixed_find`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import EMPTY
+from repro.core.layout import bucket_layout, hash_slot, split_u64
+from repro.kernels.hash_probe.kernel import hash_probe_tiles
+
+
+def fixed_hash_find(h, keys, *, tile: int = 256, interpret: bool = True):
+    """Batched probe of a FixedHash via the Pallas kernel — same contract as
+    core.hashtable.fixed_find: (found bool[K], vals u64[K]). Not jitted:
+    callable from inside jitted/shard_mapped store steps."""
+    t = keys.shape[0]
+    pad = (-t) % tile
+    kp = jnp.pad(keys, (0, pad), constant_values=EMPTY)
+    slots = hash_slot(kp, h.num_slots)
+    qh, ql = split_u64(kp)
+    lay = bucket_layout(h.keys)
+    found, col = hash_probe_tiles(qh, ql, slots, lay.key_hi, lay.key_lo,
+                                  tile=tile, interpret=interpret)
+    found = found[:t].astype(bool) & (keys != EMPTY)
+    col = col[:t]
+    vals = jnp.where(found, h.vals[slots[:t], col], jnp.uint64(0))
+    return found, vals
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def hash_probe(h, keys, *, tile: int = 256, interpret: bool = True):
+    """Jitted standalone form of `fixed_hash_find`."""
+    return fixed_hash_find(h, keys, tile=tile, interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: batched bucket probe over the same bucket-major layout
+the kernel consumes (keys as u32 hi/lo planes, precomputed slot ids)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hash_probe_ref(q_hi, q_lo, slots, key_hi, key_lo):
+    """q_*: [T] u32; slots: [T] i32; key_*: [M, B] u32. Returns
+    (found bool[T], col int32[T])."""
+    s = jnp.clip(slots, 0, key_hi.shape[0] - 1)
+    rows_h = key_hi[s]
+    rows_l = key_lo[s]
+    hit = (rows_h == q_hi[:, None]) & (rows_l == q_lo[:, None])
+    return jnp.any(hit, axis=1), jnp.argmax(hit, axis=1).astype(jnp.int32)

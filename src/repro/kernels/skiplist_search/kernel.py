@@ -24,9 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _le(qh, ql, kh, kl):
-    return (qh < kh) | ((qh == kh) & (ql <= kl))
+from repro.core.layout import key_leq as _le
 
 
 def _sk_kernel(qh_ref, ql_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
@@ -68,6 +66,8 @@ def skiplist_search_tiles(q_hi, q_lo, lvl_hi, lvl_lo, lvl_child,
     t = q_hi.shape[0]
     L, c1 = lvl_hi.shape
     cap = term_hi.shape[0]
+    if t == 0:   # empty batch: same contract as the jnp reference
+        return (jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.int32))
     tile = min(tile, t)
     assert t % tile == 0
     grid = (t // tile,)

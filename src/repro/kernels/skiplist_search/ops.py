@@ -1,5 +1,10 @@
-"""jit'd wrapper: DetSkiplist state -> kernel layout (u64 -> u32 pairs,
-levels stacked + padded) -> batched search."""
+"""jit'd wrapper: DetSkiplist state -> shared level-major layout
+(`repro.core.layout.skiplist_layout`) -> batched Pallas search.
+
+`skiplist_find` is the unjitted entry the `repro.store.exec` dispatch layer
+calls from inside already-jitted store steps; `skiplist_search` keeps the
+standalone jitted contract of `core.det_skiplist.find_batch`.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,45 +13,38 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF
+from repro.core.layout import skiplist_layout, split_u64
 from repro.kernels.skiplist_search.kernel import skiplist_search_tiles
 
 
-def split_u64(x):
-    return ((x >> jnp.uint64(32)).astype(jnp.uint32),
-            (x & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32))
-
-
 def stack_levels(s):
-    """DetSkiplist -> ([L, C1] hi, lo, child) padded with +inf sentinels."""
-    c1 = s.level_keys[0].shape[0]
-    his, los, chs = [], [], []
-    for lk, lc in zip(s.level_keys, s.level_child):
-        pad = c1 - lk.shape[0]
-        lk = jnp.pad(lk, (0, pad), constant_values=KEY_INF)
-        lc = jnp.pad(lc, (0, pad))
-        h, l = split_u64(lk)
-        his.append(h)
-        los.append(l)
-        chs.append(lc.astype(jnp.int32))
-    return jnp.stack(his), jnp.stack(los), jnp.stack(chs)
+    """DetSkiplist -> ([L, C1] hi, lo, child) padded with +inf sentinels.
+    (Compatibility veneer over `core.layout.skiplist_layout`.)"""
+    lay = skiplist_layout(s)
+    return lay.lvl_hi, lay.lvl_lo, lay.lvl_child
 
 
-@partial(jax.jit, static_argnames=("tile", "interpret"))
-def skiplist_search(s, queries, *, tile: int = 256, interpret: bool = True):
-    """Batched Find on a DetSkiplist via the Pallas kernel.
-    Returns (found bool[T], vals u64[T], idx int32[T]) — same contract as
-    core.det_skiplist.find_batch (the pure-jnp production path)."""
+def skiplist_find(s, queries, *, tile: int = 256, interpret: bool = True):
+    """Batched Find on a DetSkiplist via the Pallas kernel — same contract as
+    core.det_skiplist.find_batch: (found bool[T], vals u64[T], idx int32[T]).
+    Not jitted: callable from inside jitted/shard_mapped store steps."""
     t = queries.shape[0]
     pad = (-t) % tile
     qp = jnp.pad(queries, (0, pad), constant_values=KEY_INF)
     qh, ql = split_u64(qp)
-    lh, ll, lc = stack_levels(s)
-    th, tl = split_u64(s.term_keys)
-    tm = s.term_mark.astype(jnp.int8)
-    found, idx = skiplist_search_tiles(qh, ql, lh, ll, lc, th, tl, tm,
-                                       tile=tile, interpret=interpret)
+    lay = skiplist_layout(s)
+    found, idx = skiplist_search_tiles(
+        qh, ql, lay.lvl_hi, lay.lvl_lo, lay.lvl_child,
+        lay.term_hi, lay.term_lo, lay.term_mark,
+        tile=tile, interpret=interpret)
     found = found[:t].astype(bool) & (queries != KEY_INF)
     idx = idx[:t]
     vals = jnp.where(found, s.term_vals[jnp.clip(idx, 0, s.capacity - 1)],
                      jnp.uint64(0))
     return found, vals, idx
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def skiplist_search(s, queries, *, tile: int = 256, interpret: bool = True):
+    """Jitted standalone form of `skiplist_find`."""
+    return skiplist_find(s, queries, tile=tile, interpret=interpret)

@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-
-def _le(qh, ql, kh, kl):
-    return (qh < kh) | ((qh == kh) & (ql <= kl))
+from repro.core.layout import key_leq as _le
 
 
 def skiplist_search_ref(q_hi, q_lo, lvl_hi, lvl_lo, lvl_child, lvl_count,

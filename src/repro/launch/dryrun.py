@@ -217,6 +217,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             lanes = cfg.store_lanes
             nsh = n_devices(mesh)
             report["store_backend"] = cfg.store_backend
+            report["store_exec"] = cfg.store_exec
             state = jax.eval_shape(partial(sharded_init, cfg.store_backend,
                                            nsh, cfg.store_capacity))
             sp = P(tuple(mesh.axis_names))
@@ -226,7 +227,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             stream = lambda dt: jax.ShapeDtypeStruct(
                 (nsh * lanes,), dt, sharding=NamedSharding(mesh, sp))
             step = make_store_step(mesh, tuple(mesh.axis_names), lanes,
-                                   backend=cfg.store_backend)
+                                   backend=cfg.store_backend,
+                                   exec_mode=cfg.store_exec)
             lowered = jax.jit(step).lower(state, stream(jnp.int32),
                                           stream(jnp.uint64), stream(jnp.uint64))
         elif shape.kind == "train":

@@ -4,27 +4,38 @@ The paper's closing proposal (§IX) is hierarchical composition of its
 structures; this package is that composition layer. Module map:
 
 api       the `Store` protocol (`init/apply/scan/stats`), the `OpPlan` /
-          `OpResults` batch types, op codes, and the string-keyed backend
-          registry (`register`, `get_backend`, `available_backends`)
+          `OpResults` batch types, op codes, the uniform `STATS_SCHEMA`,
+          and the string-keyed backend registry (`register`, `get_backend`,
+          `available_backends`)
 backends  adapters wrapping det_skiplist, rand_skiplist, fixed hash,
           two-level hash, split-order, and two-level split-order behind the
           protocol — all jit/shard_map-safe pytrees, all agreeing lane-for-
           lane on the INSERTS -> DELETES -> FINDS linearization
+exec      the execution layer: FIND/probe phases dispatch through here to
+          the pure-jnp references or the Pallas kernels
+          (kernels/skiplist_search, kernels/hash_probe) — three modes
+          (jnp | interpret | pallas), bit-identical results
 tiers     the hierarchical `hash+skiplist` stack: hot fixed-hash tier over
-          an ordered skiplist tier with batched spill/promotion/flush
+          an ordered skiplist tier with batched spill/promotion/flush (the
+          hot-tier probe is the kernelized fast path)
 engine    the mesh-sharded engine (hierarchical all_to_all routing + local
           apply) generalizing core/ordered_sharded.py to any backend;
           `StoreEngine` is the one-object convenience wrapper
 
-Pick a backend by config string (`configs/*.py: store_backend`); adding a
-backend is a one-file drop-in that calls `register`.
+The stack is three explicit layers: `core.layout` owns the flat-memory
+shapes, `store.exec` owns probe execution over them, and this package's
+backends/tiers/engine own semantics, composition, and sharding. Pick a
+backend by config string (`configs/*.py: store_backend`) and an execution
+mode by `store_exec`; adding a backend is a one-file drop-in that calls
+`register`.
 """
 from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_RANGE,
-                             OpPlan, OpResults, Store, available_backends,
-                             get_backend, make_plan, register)
+                             STATS_SCHEMA, OpPlan, OpResults, Store,
+                             available_backends, get_backend, make_plan,
+                             register, uniform_stats)
 
 __all__ = [
     "OP_DELETE", "OP_FIND", "OP_INSERT", "OP_NONE", "OP_RANGE",
-    "OpPlan", "OpResults", "Store", "available_backends", "get_backend",
-    "make_plan", "register",
+    "STATS_SCHEMA", "OpPlan", "OpResults", "Store", "available_backends",
+    "get_backend", "make_plan", "register", "uniform_stats",
 ]

@@ -68,6 +68,9 @@ class Store(Protocol):
 
     name: str
     ordered: bool
+    # kernelized (optional, default False): True iff the backend's probe
+    # phases dispatch to Pallas kernels under non-jnp exec modes — the
+    # engine uses it to scope shard_map's replication-check workaround
 
     def init(self, capacity: int, **kw) -> Any:
         """Empty state holding up to ~capacity entries."""
@@ -84,9 +87,29 @@ class Store(Protocol):
         ...
 
     def stats(self, state: Any) -> Dict[str, jnp.ndarray]:
-        """Uniform occupancy scalars; at least `size` (live entries) and
-        `capacity`. No caller should reach into backend internals."""
+        """Uniform occupancy scalars: EXACTLY the `STATS_SCHEMA` key set
+        (backends pad untracked counters with zeros via `uniform_stats`).
+        No caller should reach into backend internals."""
         ...
+
+
+# Every backend's `stats()` returns EXACTLY these keys (counters a backend
+# does not track are zero), so engine-level aggregation, dashboards, and the
+# uniform-schema test never special-case a backend.
+STATS_SCHEMA = ("size", "capacity", "tombstones", "hot_size", "cold_size",
+                "l2_tables", "slots")
+
+
+def uniform_stats(**counters) -> Dict[str, jnp.ndarray]:
+    """Pad a backend's native counters to the shared `STATS_SCHEMA` key set
+    (missing keys become int64 zeros; unknown keys are an error so the
+    schema stays closed)."""
+    unknown = set(counters) - set(STATS_SCHEMA)
+    if unknown:
+        raise ValueError(f"stats keys {sorted(unknown)} not in STATS_SCHEMA; "
+                         f"extend api.STATS_SCHEMA to add a counter")
+    return {k: jnp.asarray(counters.get(k, 0)).astype(jnp.int64)
+            for k in STATS_SCHEMA}
 
 
 _REGISTRY: Dict[str, Store] = {}

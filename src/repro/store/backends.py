@@ -26,13 +26,10 @@ from repro.core import hashtable as ht
 from repro.core import rand_skiplist as rsl
 from repro.core import splitorder as so
 from repro.core.bits import EMPTY, KEY_INF
+from repro.core.layout import pow2_floor as _pow2
+from repro.store import exec as exec_
 from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, OpResults,
-                             register)
-
-
-def _pow2(n: int) -> int:
-    """Largest power of two <= max(n, 1)."""
-    return 1 << max(int(n).bit_length() - 1, 0)
+                             register, uniform_stats)
 
 
 def finalize_results(ops, valid, found, fvals, inserted, existed,
@@ -68,6 +65,7 @@ def apply_linearized(state, plan: OpPlan, insert_fn, delete_fn, find_fn,
 class DetSkiplistBackend:
     name = "det_skiplist"
     ordered = True
+    kernelized = True      # FIND dispatches to kernels/skiplist_search
 
     def init(self, capacity: int, **kw):
         return dsl.skiplist_init(capacity)
@@ -75,20 +73,22 @@ class DetSkiplistBackend:
     def apply(self, state, plan: OpPlan):
         return apply_linearized(
             state, plan, dsl.insert_batch, dsl.delete_batch,
-            lambda s, q: dsl.find_batch(s, q)[:2], KEY_INF)
+            lambda s, q: exec_.skiplist_find(s, q)[:2], KEY_INF)
 
     def scan(self, state, lo, hi, max_out: int):
         return dsl.range_query(state, lo, hi, max_out)
 
     def stats(self, state):
-        return {"size": (state.n_term - state.n_marked).astype(jnp.int64),
-                "tombstones": state.n_marked.astype(jnp.int64),
-                "capacity": jnp.int64(state.term_keys.shape[0])}
+        return uniform_stats(
+            size=state.n_term - state.n_marked,
+            tombstones=state.n_marked,
+            capacity=state.term_keys.shape[0])
 
 
 class RandSkiplistBackend:
     name = "rand_skiplist"
     ordered = True
+    kernelized = False     # MAX_GAP walk stays jnp in every mode
 
     def init(self, capacity: int, **kw):
         return rsl.rand_skiplist_init(capacity)
@@ -96,7 +96,7 @@ class RandSkiplistBackend:
     def apply(self, state, plan: OpPlan):
         return apply_linearized(
             state, plan, rsl.insert_batch, rsl.delete_batch,
-            lambda s, q: rsl.find_batch(s, q)[:2], KEY_INF)
+            lambda s, q: exec_.rand_skiplist_find(s, q)[:2], KEY_INF)
 
     def scan(self, state, lo, hi, max_out: int):
         # the randomized variant keeps the same contiguous sorted terminal
@@ -104,13 +104,15 @@ class RandSkiplistBackend:
         return dsl.range_query(state, lo, hi, max_out)
 
     def stats(self, state):
-        return {"size": (state.n_term - state.n_marked).astype(jnp.int64),
-                "tombstones": state.n_marked.astype(jnp.int64),
-                "capacity": jnp.int64(state.term_keys.shape[0])}
+        return uniform_stats(
+            size=state.n_term - state.n_marked,
+            tombstones=state.n_marked,
+            capacity=state.term_keys.shape[0])
 
 
 class _Unordered:
     ordered = False
+    kernelized = False
 
     def scan(self, state, lo, hi, max_out: int):
         raise NotImplementedError(
@@ -120,17 +122,17 @@ class _Unordered:
 
 class FixedHashBackend(_Unordered):
     name = "fixed_hash"
+    kernelized = True      # probe dispatches to kernels/hash_probe
 
     def init(self, capacity: int, bucket: int = 16, **kw):
         return ht.fixed_init(_pow2(max(capacity // bucket, 1)), bucket)
 
     def apply(self, state, plan: OpPlan):
         return apply_linearized(state, plan, ht.fixed_insert, ht.fixed_delete,
-                                ht.fixed_find, EMPTY)
+                                exec_.hash_find, EMPTY)
 
     def stats(self, state):
-        return {"size": state.count.astype(jnp.int64),
-                "capacity": jnp.int64(state.keys.size)}
+        return uniform_stats(size=state.count, capacity=state.keys.size)
 
 
 class TwoLevelHashBackend(_Unordered):
@@ -147,12 +149,14 @@ class TwoLevelHashBackend(_Unordered):
 
     def apply(self, state, plan: OpPlan):
         return apply_linearized(state, plan, ht.twolevel_insert,
-                                ht.twolevel_delete, ht.twolevel_find, EMPTY)
+                                ht.twolevel_delete, exec_.twolevel_hash_find,
+                                EMPTY)
 
     def stats(self, state):
-        return {"size": state.count.astype(jnp.int64),
-                "capacity": jnp.int64(state.l1_keys.size + state.l2_keys.size),
-                "l2_tables": jnp.sum(state.l2_block >= 0).astype(jnp.int64)}
+        return uniform_stats(
+            size=state.count,
+            capacity=state.l1_keys.size + state.l2_keys.size,
+            l2_tables=jnp.sum(state.l2_block >= 0))
 
 
 class SplitOrderBackend(_Unordered):
@@ -163,13 +167,12 @@ class SplitOrderBackend(_Unordered):
 
     def apply(self, state, plan: OpPlan):
         return apply_linearized(state, plan, so.splitorder_insert,
-                                so.splitorder_delete, so.splitorder_find,
+                                so.splitorder_delete, exec_.splitorder_find,
                                 KEY_INF)
 
     def stats(self, state):
-        return {"size": state.n.astype(jnp.int64),
-                "capacity": jnp.int64(state.rk.shape[0]),
-                "slots": state.n_slots.astype(jnp.int64)}
+        return uniform_stats(size=state.n, capacity=state.rk.shape[0],
+                             slots=state.n_slots)
 
 
 class TwoLevelSplitOrderBackend(_Unordered):
@@ -184,12 +187,11 @@ class TwoLevelSplitOrderBackend(_Unordered):
     def apply(self, state, plan: OpPlan):
         return apply_linearized(state, plan, so.twolevel_splitorder_insert,
                                 so.twolevel_splitorder_delete,
-                                so.twolevel_splitorder_find, KEY_INF)
+                                exec_.twolevel_splitorder_find, KEY_INF)
 
     def stats(self, state):
-        return {"size": jnp.sum(state.n).astype(jnp.int64),
-                "capacity": jnp.int64(state.rk.size),
-                "slots": jnp.sum(state.n_slots).astype(jnp.int64)}
+        return uniform_stats(size=jnp.sum(state.n), capacity=state.rk.size,
+                             slots=jnp.sum(state.n_slots))
 
 
 DET_SKIPLIST = register(DetSkiplistBackend())

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.routing import (axis_size, mesh_shard_map, route_back,
                                 route_to_owners)
+from repro.store import exec as exec_
 from repro.store.api import OpPlan, Store, get_backend
 
 
@@ -50,15 +51,22 @@ def store_sharding(mesh: Mesh, axis_names: Sequence[str]) -> NamedSharding:
 
 
 def make_store_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
-                    backend="det_skiplist", pool_factor: int = 2):
+                    backend="det_skiplist", pool_factor: int = 2,
+                    exec_mode: str | None = None):
     """Build the jit-able batched-op step for `backend`.
 
     Global inputs: ops[int32 S*lanes], keys[u64 S*lanes], vals[u64 S*lanes]
     sharded over the routing axes (S = total shards; each shard contributes
     `lanes` requests — "threads fill queues, then operate", §IX).
     Returns (state', results[u64 S*lanes], ok[bool S*lanes], dropped).
+
+    `exec_mode` selects the probe execution layer (`repro.store.exec`:
+    jnp | interpret | pallas; None = the module default) for the local
+    `apply` only — routing, sharding, and result plumbing are identical in
+    every mode, and so are the results (bit-identical by contract).
     """
     be = resolve(backend)
+    mode = exec_.get_mode() if exec_mode is None else exec_mode
     axis_sizes = [mesh.shape[a] for a in axis_names]
     pool = lanes * pool_factor
 
@@ -68,7 +76,8 @@ def make_store_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
         rr = route_to_owners(keys, vals, ops, valid, axis_names, axis_sizes,
                              pool)
         plan = OpPlan(ops=rr.aux, keys=rr.keys, vals=rr.vals, mask=rr.valid)
-        sl, res = be.apply(sl, plan)
+        with exec_.exec_mode(mode):   # baked in at trace time
+            sl, res = be.apply(sl, plan)
         resv, okb = route_back(res.vals, res.ok, rr.origin,
                                rr.valid & (rr.aux >= 0), axis_names,
                                axis_sizes, lanes)
@@ -76,9 +85,15 @@ def make_store_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
         return state2, resv, okb, rr.dropped[None]   # [1]/shard -> [S] global
 
     spec1 = P(tuple(axis_names))
+    # pallas_call has no shard_map replication rule: disable the check ONLY
+    # when this backend actually traces one (results unchanged — parity is
+    # tested); jnp-fallback backends keep the check in every mode
+    check = False if (mode != "jnp"
+                      and getattr(be, "kernelized", False)) else None
     step = mesh_shard_map(body, mesh=mesh,
                           in_specs=(spec1, spec1, spec1, spec1),
-                          out_specs=(spec1, spec1, spec1, spec1))
+                          out_specs=(spec1, spec1, spec1, spec1),
+                          check_vma=check)
 
     def wrapped(state, ops, keys, vals):
         st, res, ok, dropped = step(state, ops, keys, vals)
@@ -144,16 +159,19 @@ class StoreEngine:
     """
 
     def __init__(self, mesh: Mesh, axis_names: Sequence[str], lanes: int,
-                 backend="det_skiplist", pool_factor: int = 2):
+                 backend="det_skiplist", pool_factor: int = 2,
+                 exec_mode: str | None = None):
         self.mesh = mesh
         self.axis_names = tuple(axis_names)
         self.lanes = lanes
         self.backend = resolve(backend)
+        self.exec_mode = exec_mode
         self.n_shards = int(math.prod(mesh.shape[a] for a in self.axis_names))
         self.sharding = store_sharding(mesh, self.axis_names)
         self.step = jax.jit(make_store_step(mesh, self.axis_names, lanes,
                                             backend=self.backend,
-                                            pool_factor=pool_factor))
+                                            pool_factor=pool_factor,
+                                            exec_mode=exec_mode))
 
     def init(self, capacity_per_shard: int, **kw):
         return sharded_init(self.backend, self.n_shards, capacity_per_shard,

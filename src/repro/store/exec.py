@@ -1,0 +1,164 @@
+"""Execution-mode dispatch: the layer between layouts and the Store API.
+
+Every backend's FIND/probe phase calls through here, so the probe
+implementation is swappable without touching backend or tier logic. Three
+interchangeable modes, selected by config string
+(`configs/*.py: store_exec`, or the `REPRO_STORE_EXEC` env default):
+
+  jnp        pure-jnp reference probes (`core.det_skiplist.find_batch`,
+             `core.hashtable.fixed_find`, ...) — the portable baseline
+  interpret  Pallas kernels in interpreter mode — the kernel bodies execute
+             on CPU; what CI runs
+  pallas     Pallas kernels compiled (TPU) — the production hot path
+
+The correctness contract is BIT-IDENTICAL results across all three modes
+for every backend (asserted by tests/test_exec_modes.py): the kernels
+consume the same `core.layout` shapes the references do and use the same
+comparisons, so parity is by construction, and mode choice is purely a
+performance knob.
+
+Kernelized probes: the deterministic skiplist search
+(`kernels.skiplist_search`) and the fixed-hash bucket probe
+(`kernels.hash_probe` — also the §IX hot-tier fast path). Probes whose
+access pattern defeats the static-shape premise (the randomized skiplist's
+MAX_GAP-padded walk, split-order's searchsorted over the full array, the
+two-level table's pooled L2 indirection) fall back to their jnp reference
+in every mode — still routed through this module so a future kernel is a
+one-function change.
+
+The mode is read at TRACE time: `StoreEngine`/`make_store_step` bake it
+into the jitted step via `exec_mode(...)`, so two engines with different
+modes coexist; flipping the module default after a step is traced does not
+retrace it.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+MODES = ("jnp", "interpret", "pallas")
+
+
+def _check(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"unknown store exec mode {mode!r}; one of {MODES}")
+    return mode
+
+
+_mode = _check(os.environ.get("REPRO_STORE_EXEC", "jnp"))
+
+
+def get_mode() -> str:
+    return _mode
+
+
+def set_mode(mode: str) -> None:
+    global _mode
+    _mode = _check(mode)
+
+
+@contextmanager
+def exec_mode(mode: str | None):
+    """Scoped mode override (None = keep the current mode). Wrap the TRACE
+    of a jitted step to bake the mode in."""
+    global _mode
+    prev = _mode
+    if mode is not None:
+        _mode = _check(mode)
+    try:
+        yield
+    finally:
+        _mode = prev
+
+
+def _resolve(mode: str | None) -> str:
+    return _check(mode) if mode is not None else _mode
+
+
+_PALLAS_OK: bool | None = None
+
+
+def pallas_available() -> bool:
+    """True iff COMPILED Pallas kernels run on the current jax backend
+    (TPU; CPU/GPU get interpret mode only). Probed once with a tiny kernel
+    launch; tests and benchmarks use this to scope the `pallas` mode."""
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from repro.kernels.hash_probe.kernel import hash_probe_tiles
+            z32 = jnp.zeros((8,), jnp.uint32)
+            out = hash_probe_tiles(z32, z32, z32.astype(jnp.int32),
+                                   jnp.zeros((4, 8), jnp.uint32),
+                                   jnp.zeros((4, 8), jnp.uint32),
+                                   tile=8, interpret=False)
+            jax.block_until_ready(out)
+            _PALLAS_OK = True
+        except Exception:
+            _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+def runnable_modes() -> tuple:
+    """The execution modes that can actually run here (drops `pallas` off
+    TPU) — what parity tests and benchmarks iterate over."""
+    return MODES if pallas_available() else tuple(m for m in MODES
+                                                  if m != "pallas")
+
+
+# ---------------------------------------------------------------------------
+# kernelized probes
+# ---------------------------------------------------------------------------
+
+def skiplist_find(s, queries, mode: str | None = None):
+    """Deterministic-skiplist FIND: (found[Q], vals[Q], term_idx[Q])."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import det_skiplist as dsl
+        return dsl.find_batch(s, queries)
+    from repro.kernels.skiplist_search.ops import skiplist_find as sk_find
+    return sk_find(s, queries, interpret=(m == "interpret"))
+
+
+def hash_find(h, queries, mode: str | None = None):
+    """Fixed-slot hash probe: (found[Q], vals[Q]). The §IX hot-tier path."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import hashtable as ht
+        return ht.fixed_find(h, queries)
+    from repro.kernels.hash_probe.ops import fixed_hash_find
+    return fixed_hash_find(h, queries, interpret=(m == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# reference-only probes (routed here so kernelizing one is a local change)
+# ---------------------------------------------------------------------------
+
+def rand_skiplist_find(s, queries, mode: str | None = None):
+    """Randomized-skiplist FIND — jnp in every mode (the MAX_GAP-padded walk
+    has no static-shape kernel win; see docs/store_layers.md)."""
+    _resolve(mode)
+    from repro.core import rand_skiplist as rsl
+    return rsl.find_batch(s, queries)
+
+
+def twolevel_hash_find(h, queries, mode: str | None = None):
+    """Two-level hash FIND — jnp in every mode (pooled L2 indirection)."""
+    _resolve(mode)
+    from repro.core import hashtable as ht
+    return ht.twolevel_find(h, queries)
+
+
+def splitorder_find(h, queries, mode: str | None = None):
+    """Split-order FIND — jnp in every mode (global searchsorted probe)."""
+    _resolve(mode)
+    from repro.core import splitorder as so
+    return so.splitorder_find(h, queries)
+
+
+def twolevel_splitorder_find(h, queries, mode: str | None = None):
+    """Two-level split-order FIND — jnp in every mode."""
+    _resolve(mode)
+    from repro.core import splitorder as so
+    return so.twolevel_splitorder_find(h, queries)

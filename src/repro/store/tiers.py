@@ -34,7 +34,9 @@ import jax.numpy as jnp
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
 from repro.core.bits import EMPTY, KEY_INF
-from repro.store.api import OP_DELETE, OP_FIND, OP_INSERT, OpPlan, register
+from repro.store import exec as exec_
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, register,
+                             uniform_stats)
 from repro.store.backends import _pow2, finalize_results
 
 
@@ -48,6 +50,7 @@ class TieredBackend:
 
     name = "hash+skiplist"
     ordered = True
+    kernelized = True      # hot probe + cold find dispatch to kernels
 
     def __init__(self, promote: bool = True):
         self.promote = promote
@@ -71,7 +74,8 @@ class TieredBackend:
 
         # INSERTS: insert-if-absent across BOTH tiers; try hot first, spill
         # bucket-full lanes down to cold (the batched spill path)
-        in_cold, _, _ = dsl.find_batch(cold, jnp.where(ins_m, keys, KEY_INF))
+        in_cold, _, _ = exec_.skiplist_find(cold,
+                                            jnp.where(ins_m, keys, KEY_INF))
         hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals,
                                                ins_m & ~in_cold)
         spill = ins_m & ~in_cold & ~ins_hot & ~ex_hot
@@ -84,9 +88,10 @@ class TieredBackend:
         cold, del_cold = dsl.delete_batch(cold, keys, del_m & ~del_hot)
         deleted = del_hot | del_cold
 
-        # FINDS observe the post-update state of both tiers
-        f_hot, v_hot = ht.fixed_find(hot, qk)
-        f_cold, v_cold, _ = dsl.find_batch(cold, qk)
+        # FINDS observe the post-update state of both tiers; the hot probe is
+        # the kernelized fast path (kernels/hash_probe under exec dispatch)
+        f_hot, v_hot = exec_.hash_find(hot, qk)
+        f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
         found = f_hot | f_cold
         fvals = jnp.where(f_hot, v_hot, v_cold)
 
@@ -141,12 +146,12 @@ class TieredBackend:
     def stats(self, state: TierState):
         hot_size = state.hot.count.astype(jnp.int64)
         cold_size = (state.cold.n_term - state.cold.n_marked).astype(jnp.int64)
-        return {"size": hot_size + cold_size,
-                "hot_size": hot_size,
-                "cold_size": cold_size,
-                "tombstones": state.cold.n_marked.astype(jnp.int64),
-                "capacity": jnp.int64(state.hot.keys.size
-                                      + state.cold.term_keys.shape[0])}
+        return uniform_stats(
+            size=hot_size + cold_size,
+            hot_size=hot_size,
+            cold_size=cold_size,
+            tombstones=state.cold.n_marked,
+            capacity=state.hot.keys.size + state.cold.term_keys.shape[0])
 
 
 HASH_SKIPLIST = register(TieredBackend())

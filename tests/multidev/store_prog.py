@@ -106,12 +106,69 @@ def check_range(mesh, backend: str) -> None:
     print(f"RANGE-OK backend={backend} counts={cnt[:2]}")
 
 
+def check_uneven_occupancy(mesh) -> None:
+    """Engine scan/stats when per-shard occupancy is SKEWED (shard s holds
+    2s+1 keys: shard 0 nearly empty, shard 7 ~full for its lane budget),
+    and exec-layer parity on the same skewed state: the jnp and
+    Pallas-interpret engines must agree bit-for-bit."""
+    per_shard = [2 * s + 1 for s in range(N_SHARDS)]         # 1,3,...,15
+    rng = np.random.default_rng(5)
+    keys = []
+    for s, n in enumerate(per_shard):
+        low = rng.integers(1, 2**61, n, dtype=np.uint64)
+        keys.extend((np.uint64(s) << np.uint64(61)) | low)   # owner = top 3b
+    keys = np.array(keys, np.uint64)
+    total = len(keys)
+    assert len(np.unique(keys)) == total
+    ops = np.full(N_SHARDS * LANES, -1, np.int32)
+    ops[:total] = OP_INSERT
+    ks = np.zeros(N_SHARDS * LANES, np.uint64)
+    ks[:total] = keys
+
+    outs = {}
+    for mode in ("jnp", "interpret"):
+        eng = StoreEngine(mesh, AXES, LANES, backend="hash+skiplist",
+                          pool_factor=8, exec_mode=mode)
+        state = jax.device_put(eng.init(512), eng.sharding)
+        put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+        state, res, ok, dropped = eng.step(state, put(ops), put(ks),
+                                           put(ks + 1))
+        assert int(dropped) == 0
+        assert np.asarray(ok)[:total].all()
+        outs[mode] = (np.asarray(ok), np.asarray(res))
+
+        # per-shard stats see the skew exactly, under the uniform schema
+        stats = eng.stats(state)
+        assert stats["size"].tolist() == per_shard, (mode, stats["size"])
+        assert (stats["hot_size"] + stats["cold_size"]
+                == stats["size"]).all(), mode
+        assert (stats["tombstones"] == 0).all()
+
+        # cross-shard range counts on the skewed state
+        rstep = eng.range_step(max_out=total)
+        sk = np.sort(keys)
+        los = np.zeros(N_SHARDS * LANES, np.uint64)
+        his = np.zeros(N_SHARDS * LANES, np.uint64)
+        valid = np.zeros(N_SHARDS * LANES, bool)
+        los[0], his[0], valid[0] = 0, np.uint64(2**64 - 1), True   # all
+        los[1], his[1], valid[1] = sk[10], sk[50], True            # 40 keys
+        los[2], his[2], valid[2] = sk[0], sk[1], True              # 1 key
+        cnt = np.asarray(rstep(state, put(los), put(his), put(valid)))
+        assert int(cnt[0]) == total, cnt[0]
+        assert int(cnt[1]) == 40, cnt[1]
+        assert int(cnt[2]) == 1, cnt[2]
+    assert (outs["jnp"][0] == outs["interpret"][0]).all()
+    assert (outs["jnp"][1] == outs["interpret"][1]).all()
+    print(f"UNEVEN-OK per_shard={per_shard} modes=jnp,interpret")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
         check_backend(mesh, backend)
     for backend in ("det_skiplist", "hash+skiplist"):
         check_range(mesh, backend)
+    check_uneven_occupancy(mesh)
     return 0
 
 

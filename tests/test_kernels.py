@@ -11,11 +11,14 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.hash_probe.ops import hash_probe
+from repro.kernels.hash_probe.ref import hash_probe_ref
 from repro.kernels.skiplist_search.ops import skiplist_search
 from repro.kernels.skiplist_search.ref import skiplist_search_ref
 from repro.kernels.skiplist_search.ops import split_u64, stack_levels
 from repro.core.det_skiplist import (delete_batch, find_batch, insert_batch,
                                      skiplist_init)
+from repro.core.layout import bucket_layout, hash_slot
 
 
 class TestFlashAttention:
@@ -166,3 +169,41 @@ class TestSkiplistSearchKernel:
         f2, _, i2 = skiplist_search(s, queries, tile=128)
         assert (np.asarray(f) == np.asarray(f2)).all()
         assert (np.asarray(i) == np.asarray(i2)).all()
+
+
+class TestHashProbeKernel:
+    @pytest.mark.parametrize("slots,bucket,n,q", [
+        (64, 8, 200, 128), (256, 16, 1500, 512), (512, 4, 900, 256),
+    ])
+    def test_vs_fixed_find(self, slots, bucket, n, q):
+        from repro.core.hashtable import (fixed_delete, fixed_find,
+                                          fixed_init, fixed_insert)
+        rng = np.random.default_rng(slots + q)
+        h = fixed_init(slots, bucket)
+        ks = jnp.asarray(rng.integers(1, 2**62, n, dtype=np.uint64))
+        h, _, _ = fixed_insert(h, ks, ks + jnp.uint64(3))
+        h, _ = fixed_delete(h, ks[: n // 6])
+        queries = jnp.concatenate([
+            ks[: q // 2],
+            jnp.asarray(rng.integers(1, 2**62, q - q // 2, dtype=np.uint64))])
+        f_ref, v_ref = fixed_find(h, queries)
+        f_k, v_k = hash_probe(h, queries, tile=min(128, q))
+        assert (np.asarray(f_ref) == np.asarray(f_k)).all()
+        assert (np.asarray(v_ref) == np.asarray(v_k)).all()
+
+    def test_kernel_matches_standalone_ref(self):
+        from repro.core.hashtable import fixed_init, fixed_insert
+        rng = np.random.default_rng(21)
+        h = fixed_init(128, 8)
+        ks = jnp.asarray(rng.integers(1, 2**62, 400, dtype=np.uint64))
+        h, _, _ = fixed_insert(h, ks, ks)
+        queries = ks[:128]
+        qh, ql = split_u64(queries)
+        slots = hash_slot(queries, h.num_slots)
+        lay = bucket_layout(h.keys)
+        f, c = hash_probe_ref(qh, ql, slots, lay.key_hi, lay.key_lo)
+        f2, v2 = hash_probe(h, queries, tile=128)
+        assert (np.asarray(f) == np.asarray(f2)).all()
+        vals = np.where(np.asarray(f), np.asarray(h.vals)[np.asarray(slots),
+                                                          np.asarray(c)], 0)
+        assert (vals == np.asarray(v2)).all()

@@ -19,3 +19,5 @@ def test_sharded_store_multidevice():
                          text=True, timeout=900)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     assert "STORE-OK" in out.stdout
+    assert "RANGE-OK" in out.stdout
+    assert "UNEVEN-OK" in out.stdout

@@ -12,7 +12,8 @@ import pytest
 import jax.numpy as jnp
 
 import repro  # noqa: F401  (enables x64)
-from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE,
+from repro.core.layout import hash_slot
+from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, STATS_SCHEMA,
                          available_backends, get_backend, make_plan)
 
 ALL_BACKENDS = available_backends()
@@ -82,11 +83,21 @@ class TestBackendSemantics:
         assert int(be.stats(st)["size"]) == 1
 
     def test_stats_contract(self, name):
+        """Every backend returns EXACTLY the shared STATS_SCHEMA key set
+        (untracked counters are zero), in schema order, as int64."""
         be = get_backend(name)
         st = be.init(512)
         s = be.stats(st)
-        assert "size" in s and "capacity" in s
+        assert tuple(s) == STATS_SCHEMA
+        assert all(np.asarray(v).dtype == np.int64 for v in s.values())
         assert int(s["size"]) == 0 and int(s["capacity"]) >= 512
+        assert all(int(v) >= 0 for v in s.values())
+        # schema still uniform (and size live) after a few inserts
+        ks = u64([3, 5, 7])
+        st, _ = be.apply(st, make_plan(np.full(3, OP_INSERT, np.int32), ks, ks))
+        s2 = be.stats(st)
+        assert tuple(s2) == STATS_SCHEMA
+        assert int(s2["size"]) == 3
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +195,20 @@ def test_unknown_backend_error():
 # tier stack (store/tiers.py)
 # ---------------------------------------------------------------------------
 
+def _keys_filling_hot(num_slots: int, per_slot: int, seed=17) -> np.ndarray:
+    """Distinct keys hashing `per_slot`-deep into every hot-tier slot — fills
+    an [num_slots, per_slot] fixed-hash tier EXACTLY."""
+    rng = np.random.default_rng(seed)
+    buckets: dict[int, list] = {s: [] for s in range(num_slots)}
+    while any(len(v) < per_slot for v in buckets.values()):
+        cand = rng.integers(1, 2**62, 512, dtype=np.uint64)
+        slots = np.asarray(hash_slot(jnp.asarray(cand), num_slots))
+        for k, s in zip(cand.tolist(), slots.tolist()):
+            if len(buckets[s]) < per_slot and k not in buckets[s]:
+                buckets[s].append(k)
+    return np.array([k for v in buckets.values() for k in v], dtype=np.uint64)
+
+
 class TestTieredStore:
     def _setup_split(self):
         """Insert past the hot tier's capacity so spill is guaranteed."""
@@ -243,6 +268,58 @@ class TestTieredStore:
             np.full(len(ks), OP_FIND, np.int32), ks))
         assert res.ok.all()
         assert (np.asarray(res.vals) == ks + 1).all()
+
+    def _setup_exactly_full(self):
+        """Hot tier (8 slots x 4) filled to EXACTLY its capacity."""
+        be = get_backend("hash+skiplist")
+        st = be.init(1024, hot_bucket=4, hot_frac=32)
+        fill = _keys_filling_hot(8, 4)
+        st, res = be.apply(st, make_plan(
+            np.full(len(fill), OP_INSERT, np.int32), fill, fill + 1))
+        assert res.ok.all()
+        s = be.stats(st)
+        assert int(s["hot_size"]) == 32 and int(s["cold_size"]) == 0
+        return be, st, fill
+
+    def test_insert_spills_when_hot_exactly_full(self):
+        be, st, fill = self._setup_exactly_full()
+        extra = np.uint64(2**62 + 11)          # outside the fill key range
+        st, res = be.apply(st, make_plan(
+            np.array([OP_INSERT], np.int32), u64([extra]), u64([extra + 1])))
+        assert bool(res.ok[0])
+        s = be.stats(st)
+        assert int(s["hot_size"]) == 32        # no hot cell was displaced
+        assert int(s["cold_size"]) == 1        # the new key spilled down
+        # every hot resident still served, values intact
+        st, res = be.apply(st, make_plan(
+            np.full(len(fill), OP_FIND, np.int32), fill))
+        assert res.ok.all()
+        assert (np.asarray(res.vals) == fill + 1).all()
+
+    def test_promotion_noop_when_hot_exactly_full(self):
+        be, st, fill = self._setup_exactly_full()
+        extra = np.uint64(2**62 + 11)
+        st, _ = be.apply(st, make_plan(
+            np.array([OP_INSERT], np.int32), u64([extra]), u64([extra + 1])))
+        # FIND the cold resident: promotion has no hot space -> key STAYS
+        # cold, result still correct, membership conserved
+        st, res = be.apply(st, make_plan(
+            np.array([OP_FIND], np.int32), u64([extra])))
+        assert bool(res.ok[0]) and int(res.vals[0]) == int(extra) + 1
+        s = be.stats(st)
+        assert int(s["hot_size"]) == 32 and int(s["cold_size"]) == 1
+        assert int(s["size"]) == len(fill) + 1
+
+    def test_flush_when_hot_exactly_full(self):
+        be, st, fill = self._setup_exactly_full()
+        st = be.flush(st)
+        s = be.stats(st)
+        assert int(s["hot_size"]) == 0
+        assert int(s["cold_size"]) == len(fill) == int(s["size"])
+        st, res = be.apply(st, make_plan(
+            np.full(len(fill), OP_FIND, np.int32), fill))
+        assert res.ok.all()
+        assert (np.asarray(res.vals) == fill + 1).all()
 
     def test_scan_sees_both_tiers(self):
         be, st, ks = self._setup_split()
