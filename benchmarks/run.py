@@ -27,10 +27,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (framework_bench, probe_modes, table1_queues,
                             table2_3_skiplist, table4_det_vs_rand,
-                            table5_8_hashes)
+                            table5_8_hashes, tiers_churn)
     mods = {m.__name__.rsplit(".", 1)[-1]: m
             for m in (table1_queues, table2_3_skiplist, table4_det_vs_rand,
-                      table5_8_hashes, probe_modes, framework_bench)}
+                      table5_8_hashes, probe_modes, tiers_churn,
+                      framework_bench)}
     unknown = set(args.only or ()) - set(mods)
     if unknown:
         ap.error(f"unknown table(s) {sorted(unknown)}; "

@@ -1,0 +1,85 @@
+"""Tier-churn benchmark: the §IX tier stacks under a skewed, churning
+workload, against the flat skiplist baseline.
+
+The workload models what the tier stack exists for: a working set larger
+than the hot tier, with a skewed access pattern (a small hot set absorbs
+most FINDs) plus a steady stream of new inserts and deletes that forces
+eviction, spill, and promotion every batch. The stack is preloaded past the
+warm tier's capacity so all three tiers of `tiered3*` are live, then one
+jitted churn `apply` is timed per (backend, exec mode).
+
+Rows land in ``BENCH_tiers.json`` (`benchmarks.common.Recorder`; CI runs
+this in smoke mode and uploads the artifact). Derived fields record the
+final tier residency and the cumulative eviction/promotion counters, so
+the JSON shows WHERE the policies put the data, not just how fast the
+batch ran. On CPU the `interpret` rows measure Pallas-interpreter overhead
+(expected to lose to `jnp`); `pallas` rows appear on TPU. Results are
+bit-identical across modes and backends by the store contract, so every
+comparison here is purely about performance and residency.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import Recorder, bench, finish
+from repro.store import OP_DELETE, OP_FIND, OP_INSERT, get_backend, make_plan
+from repro.store import exec as exec_
+
+CAP = 512            # tiered3 warm-tier capacity (hot ~CAP/8, spill CAP)
+PRELOAD = 900        # past the warm capacity -> the spill runs are live
+WIDTH = 256          # churn-plan lanes
+HOT_SET = 64         # the skewed FIND working set
+ROUNDS = 4           # preload batches
+# capacities matched by TOTAL entry slots (~1.1k) so no backend drops the
+# preload: the flat skiplist gets one big array, the 2-tier stack a bigger
+# warm tier, the 3-tier stacks overflow into their spill runs by design
+BACKENDS = {"det_skiplist": 1088, "hash+skiplist": 1024, "tiered3": CAP,
+            "tiered3/lru": CAP, "tiered3/size": CAP}
+
+
+def _streams(rng):
+    pool = np.unique(rng.integers(1, 2**62, PRELOAD + PRELOAD // 4,
+                                  dtype=np.uint64))[:PRELOAD]
+    preload = np.array_split(pool, ROUNDS)
+    hot = pool[:HOT_SET]
+    # the churn plan: skewed finds + fresh inserts + deletes of cold keys
+    ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], WIDTH,
+                     p=[0.5, 0.3, 0.2]).astype(np.int32)
+    keys = np.where(rng.random(WIDTH) < 0.7, rng.choice(hot, WIDTH),
+                    rng.choice(pool, WIDTH))
+    keys = np.where(ops == OP_INSERT,
+                    rng.integers(2**62, 2**63, WIDTH, dtype=np.uint64),
+                    keys).astype(np.uint64)
+    return preload, make_plan(ops, keys, keys + 1)
+
+
+def run(out_dir: str | None = None):
+    rec = Recorder("tiers")
+    rng = np.random.default_rng(23)
+    preload, churn = _streams(rng)
+    for name, cap in BACKENDS.items():
+        be = get_backend(name)
+        for mode in exec_.runnable_modes():
+            with exec_.exec_mode(mode):
+                st = be.init(cap)
+                step = jax.jit(be.apply)
+                for chunk in preload:
+                    st, _ = step(st, make_plan(
+                        np.full(len(chunk), OP_INSERT, np.int32), chunk,
+                        chunk + 1))
+                stats = {k: int(v) for k, v in be.stats(st).items()}
+                assert stats["size"] == PRELOAD, (name, stats)
+                st, _ = step(st, churn)      # settle residency post-churn
+                t = bench(lambda: step(st, churn))
+                stats = {k: int(v) for k, v in be.stats(st).items()}
+            rec.record(f"tiers/churn/backend={name}/mode={mode}",
+                       t / WIDTH, ops_per_sec=WIDTH / t, width=WIDTH,
+                       preload=PRELOAD, backend=name, mode=mode,
+                       hot_size=stats["hot_size"],
+                       cold_size=stats["cold_size"],
+                       spill_size=stats["spill_size"],
+                       evictions=stats["evictions"],
+                       promotions=stats["promotions"])
+    finish(rec, out_dir)
+    return rec

@@ -31,7 +31,8 @@ from repro.store.engine import StoreEngine  # noqa: E402
 
 AXES = ("pod", "data")
 LANES = 32
-BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist")
+BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist",
+            "tiered3/lru")
 
 
 def workload(n_rounds: int, total: int, seed: int = 0):

@@ -80,9 +80,12 @@ class ModelConfig:
     # --- kvstore (the paper's own architecture) ---
     store_capacity: int = 0
     store_lanes: int = 0
-    store_backend: str = "det_skiplist"  # any repro.store registry name
-                                         # (e.g. twolevel_hash, splitorder,
-                                         # hash+skiplist tier stack)
+    store_backend: str = "det_skiplist"  # any repro.store registry name:
+                                         # flat structures (twolevel_hash,
+                                         # splitorder, ...) or a tier stack —
+                                         # "hash+skiplist" (2-tier) or
+                                         # "tiered3[/lru|/size]" (3-tier with
+                                         # an eviction policy; docs/tiers.md)
     store_exec: str = "jnp"              # probe execution mode (store.exec):
                                          # jnp | interpret | pallas —
                                          # bit-identical results, perf knob

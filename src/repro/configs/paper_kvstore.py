@@ -3,8 +3,10 @@ dry-run config — the store step lowers on the production meshes.
 
 `store_backend` selects the engine through the `repro.store` registry:
 "det_skiplist" is the paper's flagship; "hash+skiplist" is its §IX
-hierarchical proposal (hot hash tier over the ordered skiplist); any other
-registered backend (twolevel_hash, splitorder, ...) drops in unchanged."""
+hierarchical proposal (hot hash tier over the ordered skiplist);
+"tiered3[/lru|/size]" deepens it to three tiers with hot-tier eviction
+policies (docs/tiers.md); any other registered backend (twolevel_hash,
+splitorder, ...) drops in unchanged."""
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(
@@ -19,6 +21,14 @@ def reduced():
 def tiered():
     """The §IX hierarchical composition on the same shapes."""
     return CONFIG.replace(store_backend="hash+skiplist")
+
+def tiered3(policy: str = "lru"):
+    """The three-deep §IX stack (hash -> skiplist -> host spill) with a
+    hot-tier eviction policy ("lru" | "size"; "none" = spill-only). Results
+    stay bit-identical to every other backend; residency is what changes."""
+    name = "tiered3" if policy == "none" else f"tiered3/{policy}"
+    return CONFIG.replace(store_backend=name)
+
 
 def kernelized(mode: str = "pallas"):
     """Probe phases through the Pallas execution layer ("interpret" on CPU);

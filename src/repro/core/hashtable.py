@@ -101,41 +101,81 @@ def _slot_of(h: FixedHash, keys: jnp.ndarray) -> jnp.ndarray:
     return hash_slot(keys, h.num_slots)
 
 
+class BucketInsertPlan(NamedTuple):
+    """The shared insert-linearization prologue of a fixed-slot table, in
+    sorted (slot, key) lane order: who exists, who is an in-batch
+    duplicate, which candidates fit an empty bucket column. `fixed_insert`
+    consumes it directly; the tier stack's policy-driven insert
+    (`store/tiers.py`) extends it with eviction, so the two insert paths
+    share ONE linearization (dup/exists/rank rules) by construction."""
+    order: jnp.ndarray   # [K] sorted-lane permutation
+    inv: jnp.ndarray     # [K] inverse permutation (back to caller order)
+    ss: jnp.ndarray      # [K] slots, sorted order
+    sk: jnp.ndarray      # [K] keys, sorted order
+    sv: jnp.ndarray      # [K] vals, sorted order
+    sm: jnp.ndarray      # [K] mask, sorted order
+    rows: jnp.ndarray    # [K, B] pre-batch bucket rows
+    dup: jnp.ndarray     # [K] in-batch duplicate (not the first masked lane)
+    exists: jnp.ndarray  # [K] key already stored (pre-batch)
+    cand: jnp.ndarray    # [K] insert candidate (masked, no dup, absent)
+    rank: jnp.ndarray    # [K] within-slot rank among candidates
+    col_e: jnp.ndarray   # [K] empty-column placement for `rank`
+    fit_e: jnp.ndarray   # [K] candidate fits an empty column
+
+
+def bucket_insert_plan(h: FixedHash, keys, vals, mask) -> BucketInsertPlan:
+    """Build the `BucketInsertPlan` for one batched insert (pre-batch
+    state; callers perform the scatters)."""
+    mask = mask & (keys != EMPTY)
+    slots = _slot_of(h, keys)
+    order, ss, sk, sm, dup, run_start, inv = _batch_plan(slots, keys, mask)
+    rows = h.keys[ss]
+    exists = sm & jnp.any(rows == sk[:, None], axis=1) & ~dup
+    cand = sm & ~dup & ~exists
+    rank = _seg_rank(cand, run_start)
+    col_e, fit_e = _nth_empty(rows, rank)
+    return BucketInsertPlan(order=order, inv=inv, ss=ss, sk=sk,
+                            sv=vals[order], sm=sm, rows=rows, dup=dup,
+                            exists=exists, cand=cand, rank=rank, col_e=col_e,
+                            fit_e=fit_e)
+
+
 def fixed_insert(h: FixedHash, keys: jnp.ndarray, vals: jnp.ndarray,
                  mask: jnp.ndarray | None = None):
     """Returns (h', inserted[K], existed[K]). Bucket-full lanes fail (the
-    bounded-collision threshold; the two-level table is the remedy)."""
+    bounded-collision threshold; the two-level table and the tier stacks'
+    eviction policies are the remedies)."""
     K = keys.shape[0]
     M, B = h.num_slots, h.bucket
     if mask is None:
         mask = jnp.ones((K,), bool)
-    mask = mask & (keys != EMPTY)
-    slots = _slot_of(h, keys)
-    order, ss, sk, sm, dup, run_start, inv = _batch_plan(slots, keys, mask)
+    p = bucket_insert_plan(h, keys, vals, mask)
+    ins = p.cand & p.fit_e
 
-    rows = h.keys[ss]                                  # [K, B] pre-batch state
-    exists = sm & jnp.any(rows == sk[:, None], axis=1) & ~dup
-    cand = sm & ~dup & ~exists
-    rank = _seg_rank(cand, run_start)
-    col, fit = _nth_empty(rows, rank)
-    ins = cand & fit
-
-    flat = jnp.where(ins, ss * B + col, M * B)
-    sv = vals[order]
-    nk = h.keys.reshape(-1).at[flat].set(sk, mode="drop").reshape(M, B)
-    nv = h.vals.reshape(-1).at[flat].set(sv, mode="drop").reshape(M, B)
-    h2 = FixedHash(keys=nk, vals=nv, count=h.count + jnp.sum(ins).astype(jnp.int64))
-    return h2, ins[inv], (exists | dup)[inv]
+    flat = jnp.where(ins, p.ss * B + p.col_e, M * B)
+    nk = h.keys.reshape(-1).at[flat].set(p.sk, mode="drop").reshape(M, B)
+    nv = h.vals.reshape(-1).at[flat].set(p.sv, mode="drop").reshape(M, B)
+    h2 = FixedHash(keys=nk, vals=nv,
+                   count=h.count + jnp.sum(ins).astype(jnp.int64))
+    return h2, ins[p.inv], (p.exists | p.dup)[p.inv]
 
 
-def fixed_find(h: FixedHash, keys: jnp.ndarray):
+def fixed_find_cols(h: FixedHash, keys: jnp.ndarray):
+    """`fixed_find` plus the hit column: (found[K], vals[K], col[K] int32).
+    `col` is the first matching bucket column (unique per key — the table is
+    insert-if-absent) and feeds the tier stack's eviction-policy metadata
+    refresh (`store/tiers.py`); col of a miss is unspecified."""
     slots = _slot_of(h, keys)
     rows = h.keys[slots]
     hit = rows == keys[:, None]
     found = jnp.any(hit, axis=1) & (keys != EMPTY)
-    col = jnp.argmax(hit, axis=1)
+    col = jnp.argmax(hit, axis=1).astype(jnp.int32)
     vals = jnp.where(found, h.vals[slots, col], jnp.uint64(0))
-    return found, vals
+    return found, vals, col
+
+
+def fixed_find(h: FixedHash, keys: jnp.ndarray):
+    return fixed_find_cols(h, keys)[:2]
 
 
 def fixed_delete(h: FixedHash, keys: jnp.ndarray, mask: jnp.ndarray | None = None):

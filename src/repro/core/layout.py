@@ -28,6 +28,16 @@ Conventions:
 * **Pooled blocks** — `block_arrays` allocates `[P, ...]` pooled payload
   arrays (two-level hash L2 tables, ring-queue blocks) matching the
   `core.blockpool` id/generation allocator.
+* **Eviction-policy metadata** — `policy_arrays` allocates the per-entry
+  int32 metadata plane a tiered hot table carries NEXT TO its key plane
+  (same `[M, B]` shape, so one bucket row of keys and one row of metadata
+  are adjacent tiles). LRU-by-batch stores the last-touch batch clock;
+  size-aware stores `val_weight` (payload byte count). The probe kernels
+  read keys only; the policy planes are updated on the u64 host path.
+* **Spill runs** — `spill_arrays` allocates the cold host-spill tier: flat
+  append-only key/value planes (`kv_arrays` conventions) plus tombstone and
+  run-boundary marks. Each batch that spills appends one SORTED run;
+  membership is a masked compare, scans merge the runs (store/tiers.py).
 
 Pure layout, no execution: the probe loops over these shapes live in
 `repro.kernels.*` and are dispatched by `repro.store.exec`.
@@ -72,6 +82,44 @@ def block_arrays(num_blocks: int, block_shape, key_fill=KEY_INF):
     if isinstance(block_shape, int):
         block_shape = (block_shape,)
     return kv_arrays((num_blocks,) + tuple(block_shape), key_fill)
+
+
+# ---------------------------------------------------------------------------
+# eviction-policy metadata + spill-run planes (the §IX tier stack)
+# ---------------------------------------------------------------------------
+
+def policy_arrays(shape) -> jnp.ndarray:
+    """Per-entry eviction-policy metadata, one int32 per stored key (same
+    shape as the key plane it annotates — for a bucket table, `[M, B]`).
+    The meaning is the policy's: LRU-by-batch stamps the batch clock at
+    insert/touch; size-aware stamps `val_weight`. Zeros = empty cells."""
+    if isinstance(shape, int):
+        shape = (shape,)
+    return jnp.zeros(shape, jnp.int32)
+
+
+def val_weight(vals: jnp.ndarray) -> jnp.ndarray:
+    """The size-aware policy's deterministic payload weight: bytes needed to
+    encode the u64 value (1..8). A pure function of the stored value, so
+    every exec mode and every shard computes the same weight."""
+    v = vals.astype(jnp.uint64)
+    bits = jnp.zeros(v.shape, jnp.int32)
+    for shift in (32, 16, 8, 4, 2, 1):
+        big = v >= (jnp.uint64(1) << jnp.uint64(shift))
+        bits = bits + jnp.where(big, shift, 0)
+        v = jnp.where(big, v >> jnp.uint64(shift), v)
+    bits = bits + v.astype(jnp.int32)        # +1 when any bit remains
+    return jnp.maximum((bits + 7) // 8, 1)   # bytes, floor 1
+
+
+def spill_arrays(capacity: int):
+    """The cold spill tier's planes: append-only u64 (keys, vals) with the
+    shared KEY_INF padding, bool tombstones (`dead`), and bool run-boundary
+    marks (`run_start[i]` = entry i opens a sorted run). Append-only: cells
+    `< n` are immutable except for tombstoning, so the whole region can live
+    in host/pinned memory and be DMA'd in bulk."""
+    keys, vals = kv_arrays(capacity)
+    return keys, vals, jnp.zeros((capacity,), bool), jnp.zeros((capacity,), bool)
 
 
 # ---------------------------------------------------------------------------

@@ -17,9 +17,12 @@ from repro.core.layout import bucket_layout, hash_slot, split_u64
 from repro.kernels.hash_probe.kernel import hash_probe_tiles
 
 
-def fixed_hash_find(h, keys, *, tile: int = 256, interpret: bool = True):
+def fixed_hash_find_cols(h, keys, *, tile: int = 256, interpret: bool = True):
     """Batched probe of a FixedHash via the Pallas kernel — same contract as
-    core.hashtable.fixed_find: (found bool[K], vals u64[K]). Not jitted:
+    core.hashtable.fixed_find_cols: (found bool[K], vals u64[K], col i32[K]).
+    The kernel already emits the hit column (argmax over the bucket row, the
+    same first-match rule as the jnp reference), so surfacing it for the tier
+    stack's eviction-policy metadata refresh costs nothing. Not jitted:
     callable from inside jitted/shard_mapped store steps."""
     t = keys.shape[0]
     pad = (-t) % tile
@@ -32,7 +35,13 @@ def fixed_hash_find(h, keys, *, tile: int = 256, interpret: bool = True):
     found = found[:t].astype(bool) & (keys != EMPTY)
     col = col[:t]
     vals = jnp.where(found, h.vals[slots[:t], col], jnp.uint64(0))
-    return found, vals
+    return found, vals, col
+
+
+def fixed_hash_find(h, keys, *, tile: int = 256, interpret: bool = True):
+    """(found, vals) form of `fixed_hash_find_cols` — the contract of
+    core.hashtable.fixed_find."""
+    return fixed_hash_find_cols(h, keys, tile=tile, interpret=interpret)[:2]
 
 
 @partial(jax.jit, static_argnames=("tile", "interpret"))

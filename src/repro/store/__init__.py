@@ -15,9 +15,12 @@ exec      the execution layer: FIND/probe phases dispatch through here to
           the pure-jnp references or the Pallas kernels
           (kernels/skiplist_search, kernels/hash_probe) — three modes
           (jnp | interpret | pallas), bit-identical results
-tiers     the hierarchical `hash+skiplist` stack: hot fixed-hash tier over
-          an ordered skiplist tier with batched spill/promotion/flush (the
-          hot-tier probe is the kernelized fast path)
+tiers     the hierarchical tier stacks: `hash+skiplist` (hot fixed-hash
+          over the ordered skiplist) and `tiered3[/lru|/size]` (a third
+          append-only host-spill tier of sorted runs, plus pluggable
+          deterministic hot-tier eviction policies — LRU-by-batch and
+          size-aware), with batched spill/eviction/promotion/flush; the
+          hot-tier probe is the kernelized fast path (docs/tiers.md)
 engine    the mesh-sharded engine (hierarchical all_to_all routing + local
           apply) generalizing core/ordered_sharded.py to any backend;
           `StoreEngine` is the one-object convenience wrapper

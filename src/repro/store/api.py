@@ -19,8 +19,25 @@ common contract first: this module defines it.
   `stats(state)` returns uniform occupancy scalars (at least `size` and
   `capacity`).
 * registry — backends register under a string key so callers select one by
-  config (`configs/paper_kvstore.py: store_backend`) and every future
-  backend is a one-file drop-in.
+  config (`configs/*.py: ModelConfig.store_backend`) and every future
+  backend is a one-file drop-in. Built-in registry strings:
+
+    det_skiplist         §II deterministic 1-2-3-4 skiplist (ordered)
+    rand_skiplist        §VI randomized comparator (ordered)
+    fixed_hash           §VII fixed-slot MWMR table
+    twolevel_hash        §VII two-level table with pooled L2 expansion
+    splitorder           §VII/VIII split-order table
+    twolevel_splitorder  §VIII two-level split-order (NUMA analogue)
+    hash+skiplist        §IX two-tier stack: hot fixed-hash over skiplist
+    tiered3              §IX three-tier stack (hash -> skiplist -> spill)
+    tiered3/lru          tiered3 with LRU-by-batch hot-tier eviction
+    tiered3/size         tiered3 with size-aware hot-tier eviction
+
+  The first six live in `store/backends.py`, the tier stacks in
+  `store/tiers.py` (policy semantics in docs/tiers.md). Execution mode is
+  orthogonal: `store/exec.py` (`store_exec` config / `REPRO_STORE_EXEC`
+  env var) picks jnp | interpret | pallas probes for ANY backend, with
+  bit-identical results.
 
 Op codes are shared with the router (`core/ordered_sharded.py` re-exports
 them for compatibility): lane op `OP_NONE` means an idle lane.
@@ -96,8 +113,17 @@ class Store(Protocol):
 # Every backend's `stats()` returns EXACTLY these keys (counters a backend
 # does not track are zero), so engine-level aggregation, dashboards, and the
 # uniform-schema test never special-case a backend.
+#   size        live entries across every tier/level
+#   capacity    total allocated entry slots
+#   tombstones  lazily-deleted entries awaiting compaction
+#   hot_size / cold_size / spill_size   per-tier live entries of the tiered
+#               stacks (hot fixed-hash / warm skiplist / cold spill runs)
+#   l2_tables   expanded second-level tables (twolevel_hash)
+#   slots       live split-order slot count
+#   evictions / promotions   cumulative tier-policy movement counters
+#               (tiered stacks; preserved across `flush`)
 STATS_SCHEMA = ("size", "capacity", "tombstones", "hot_size", "cold_size",
-                "l2_tables", "slots")
+                "spill_size", "l2_tables", "slots", "evictions", "promotions")
 
 
 def uniform_stats(**counters) -> Dict[str, jnp.ndarray]:
@@ -130,6 +156,9 @@ def _ensure_builtin() -> None:
 
 
 def get_backend(name: str) -> Store:
+    """Look up a registered backend by its registry string (the module
+    docstring lists the built-ins; `available_backends()` lists everything
+    currently registered, including third-party drop-ins)."""
     _ensure_builtin()
     try:
         return _REGISTRY[name]
@@ -139,5 +168,6 @@ def get_backend(name: str) -> Store:
 
 
 def available_backends() -> list[str]:
+    """Sorted registry strings of every registered backend."""
     _ensure_builtin()
     return sorted(_REGISTRY)

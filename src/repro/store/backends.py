@@ -15,7 +15,8 @@ Registered names:
   twolevel_hash        §VII two-level table with pooled L2 expansion
   splitorder           §VII/VIII split-order table
   twolevel_splitorder  §VIII two-level split-order (NUMA-partition analogue)
-(`tiers.py` adds the hierarchical `hash+skiplist` stack.)
+(`tiers.py` adds the hierarchical stacks: `hash+skiplist` and
+`tiered3[/lru|/size]`.)
 """
 from __future__ import annotations
 

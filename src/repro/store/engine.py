@@ -8,10 +8,16 @@ DCI hop — first), the backend's `apply` executed locally, results routed back
 to the requesting shard/lane.
 
 Selection is by config string (`get_backend`): swapping `det_skiplist` for
-`twolevel_hash`, `splitorder`, or the tiered `hash+skiplist` stack changes
-one argument, nothing else — the routing, sharding, and result plumbing are
-backend-agnostic. `core/ordered_sharded.py` keeps its original API as thin
-wrappers over this module.
+`twolevel_hash`, `splitorder`, or a tier stack (`hash+skiplist`,
+`tiered3/lru`, ...) changes one argument, nothing else — the routing,
+sharding, and result plumbing are backend-agnostic, and each shard runs its
+own full tier stack (hot table, warm skiplist, spill runs, and policy
+state all shard on dim 0 like any other state leaf). Because the policies
+are deterministic and the linearization is order-independent for distinct
+keys, per-shard tier residency is EXACTLY what a single-device instance
+produces for that shard's sub-stream — asserted by
+`tests/multidev/store_prog.py`. `core/ordered_sharded.py` keeps its
+original API as thin wrappers over this module.
 """
 from __future__ import annotations
 
@@ -150,6 +156,12 @@ def sharded_stats(backend, state) -> dict:
 
 class StoreEngine:
     """Convenience bundle: backend + mesh + jitted step, one object.
+
+    `backend` is a registry string (`api.available_backends()`: flat
+    structures, or the `hash+skiplist` / `tiered3[/lru|/size]` tier
+    stacks) or a `Store` instance; `exec_mode` bakes a probe execution
+    mode (jnp | interpret | pallas, `repro.store.exec`) into the jitted
+    step — None uses the process default (`REPRO_STORE_EXEC`).
 
     >>> eng = StoreEngine(mesh, ("pod", "data"), lanes=32,
     ...                   backend="hash+skiplist")

@@ -45,6 +45,11 @@ def _check(mode: str) -> str:
     return mode
 
 
+# REPRO_STORE_EXEC: the process-wide default execution mode, read ONCE at
+# import ("jnp" | "interpret" | "pallas"; default "jnp"). CI re-runs the
+# kernel suites with REPRO_STORE_EXEC=interpret; `set_mode`/`exec_mode()`
+# override it per call site, and `StoreEngine(exec_mode=...)` bakes an
+# explicit mode into its jitted step regardless of this default.
 _mode = _check(os.environ.get("REPRO_STORE_EXEC", "jnp"))
 
 
@@ -131,6 +136,23 @@ def hash_find(h, queries, mode: str | None = None):
     return fixed_hash_find(h, queries, interpret=(m == "interpret"))
 
 
+def hash_find_cols(h, queries, mode: str | None = None):
+    """Fixed-slot hash probe that also reports the hit column:
+    (found[Q], vals[Q], col[Q] i32). This is the policy-aware form of the
+    hot-tier probe: the column is what lets an eviction policy refresh its
+    per-entry metadata plane (`core.layout.policy_arrays`) after a hit —
+    LRU-by-batch stamps the batch clock at [slot, col]. Both the jnp
+    reference and the Pallas kernel derive the column with the same
+    first-match argmax over the bucket row, so metadata stays bit-identical
+    across modes (col of a miss is unspecified; callers mask by `found`)."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import hashtable as ht
+        return ht.fixed_find_cols(h, queries)
+    from repro.kernels.hash_probe.ops import fixed_hash_find_cols
+    return fixed_hash_find_cols(h, queries, interpret=(m == "interpret"))
+
+
 # ---------------------------------------------------------------------------
 # reference-only probes (routed here so kernelizing one is a local change)
 # ---------------------------------------------------------------------------
@@ -162,3 +184,15 @@ def twolevel_splitorder_find(h, queries, mode: str | None = None):
     _resolve(mode)
     from repro.core import splitorder as so
     return so.twolevel_splitorder_find(h, queries)
+
+
+def spill_find(sp, queries, mode: str | None = None):
+    """Cold spill-tier membership probe: (found[Q], vals[Q]). jnp in every
+    mode for now — a masked flat compare over the append-only runs (the
+    cold tier is the batched/remote path, so probe latency is the least
+    critical of the three tiers). It still receives the full spill state —
+    run boundaries, tombstones, cursor — and routes through this module, so
+    a per-run sorted-probe kernel is a one-function change later."""
+    _resolve(mode)
+    from repro.store.tiers import spill_find_ref
+    return spill_find_ref(sp, queries)

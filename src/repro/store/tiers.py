@@ -1,131 +1,468 @@
-"""Hierarchical tier stack: hot fixed-slot hash in front of an ordered
-skiplist (the paper's closing proposal, §IX: "hierarchical usage of
-concurrent data structures ... reduces memory accesses from remote NUMA
-nodes").
+"""Hierarchical tier stack (paper §IX): hot fixed-hash tier with pluggable
+eviction policies, warm ordered skiplist tier, and an optional cold
+"host spill" tier of append-only sorted runs.
 
-Layout invariant: every live key resides in EXACTLY ONE tier. The hot tier
-is a small fixed-slot table (one VMEM-tile row per bucket — the constant-cost
-fast path); the cold tier is the deterministic skiplist (ordered, large).
+The paper's closing proposal is *hierarchical usage of concurrent data
+structures* so hot data stays in the fastest tier and remote/cold accesses
+are batched. Related work ("Skiplists with Foresight", NUMA-local skip
+graphs) shows the latency win comes from locality-aware PLACEMENT and
+EVICTION, not just capacity spill — hence the policy layer here.
 
-Batched movement between tiers, all inside one `apply` (jit-able, no host
-round trips):
-  * spill     — insert lanes whose hot bucket is full fall through to cold
-  * promotion — FIND lanes served by the cold tier are re-inserted into the
-                hot tier (when bucket space allows) and deleted from cold,
-                so repeated hot-set accesses migrate up, batch by batch
-  * flush     — explicit bulk demotion of the whole hot tier into cold
-                (used before ordered bulk work, checkpoint compaction, ...)
+Tier layout (every live key resides in EXACTLY ONE tier):
 
-Linearization matches every flat backend: INSERTS -> DELETES -> FINDS, first
-lane wins on duplicates. Promotion runs after FINDS and is membership-neutral,
-so results are bit-identical to the flat `det_skiplist` backend — asserted by
-`examples/kvstore_service.py` and `tests/test_store_api.py`.
+  hot    fixed-slot hash (`core.hashtable.FixedHash`): one VMEM-tile row
+         per bucket, the kernelized constant-cost fast path, annotated with
+         a per-entry policy-metadata plane (`core.layout.policy_arrays`)
+  warm   the deterministic skiplist (ordered, large — the `cold` field,
+         named for continuity with the two-tier stack)
+  cold   `SpillTier` (depth-3 only): append-only sorted runs outside the
+         hot/warm device-resident structures (`core.layout.spill_arrays`).
+         Cells below the cursor are immutable except for tombstones, so the
+         region can live in host/pinned memory and be DMA'd in bulk; runs
+         are merged on scan, and `spill_compact` rewrites them (dropping
+         tombstones) when dead entries pass 1/4 of the appended total.
 
-`scan` stays exact: counts merge the cold range count with a hot-tier
-in-range reduction, and materialized rows are the sorted union of both tiers
-(truncated at max_out, same contract as the flat ordered backends).
+Eviction policies (the `policy` knob; state carried in `TierState.hot_meta`
+plus the `clock` batch counter — all deterministic, jit-able, and
+bit-identical across exec modes):
+
+  none   no eviction: bucket-full inserts fall through (spill-only, the
+         original two-tier behavior)
+  lru    LRU-by-batch: `hot_meta[slot, col]` holds the batch clock of the
+         entry's last touch — placement, FIND hit, or an INSERT that found
+         the key already resident; a full bucket evicts the oldest stamp
+         (ties: lowest column) down to the warm tier and installs the
+         incoming key hot — repeated access keeps an entry resident
+  size   size-aware: `hot_meta` holds `core.layout.val_weight` (payload
+         bytes); a full bucket evicts the LARGEST payload first (ties:
+         lowest column), biasing the fast tier toward many small entries
+
+Batched movement between tiers, all inside one `apply` (no host round
+trips):
+  * spill     — insert lanes the hot tier cannot place (bucket full under
+                `none`, or more lanes than bucket width under any policy)
+                fall to warm; warm capacity overflow appends to the cold
+                spill runs
+  * eviction  — policy victims demote hot -> warm (-> spill runs on warm
+                overflow), batched with the inserts that displaced them.
+                Evictions are capped at the lower tiers' free headroom, so
+                a displaced resident ALWAYS lands somewhere: when the
+                whole stack is full, the NEW lane fails (the flat
+                backend's allocation-failure analogue), never a resident
+  * promotion — FIND lanes served by warm or spill are re-installed hot
+                (evicting victims under `lru`/`size`; only into free space
+                under `none`) and removed from their source tier
+  * flush     — explicit bulk demotion of the whole hot tier into warm
+                (-> spill on overflow); entries the lower tiers cannot
+                absorb stay hot (demotion is lossless here too). Flushed
+                cells' policy metadata is cleared WITH the keys, but the
+                batch clock and the cumulative eviction/promotion counters
+                are preserved — a flush is an event in the policy's
+                history, not a history reset.
+
+Linearization matches every flat backend: INSERTS -> DELETES -> FINDS,
+first lane wins on duplicates. Eviction and promotion are
+membership-neutral (they move keys between tiers, never add or drop one),
+so EVERY tier configuration is bit-identical to the flat `det_skiplist`
+backend for the same `OpPlan` stream — asserted across all registered tier
+configs by `tests/test_store_api.py`, across exec modes by
+`tests/test_exec_modes.py`, and for residency itself (the full state, not
+just results) by `tests/test_tiers3.py`.
+
+`scan` stays exact: the warm range count/slice merges with in-range
+reductions over the hot table and the live spill-run entries; materialized
+rows are the sorted union of all tiers, truncated at `max_out`.
+
+Registered configurations (see `store.api`): `hash+skiplist` (2-tier,
+policy `none` — unchanged semantics), `tiered3`, `tiered3/lru`,
+`tiered3/size` (3-tier). Any depth/policy combination can be constructed
+directly: `TieredBackend(depth=2, policy="lru")`. Capacity sizing: the warm
+tier holds `capacity` entries and (depth 3) the spill runs another
+`spill_cap` (default `capacity`), so policy-driven demotion always has
+somewhere to put a victim until the whole stack is genuinely full.
+See docs/tiers.md for the architecture walkthrough and a worked example.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
-from repro.core.bits import EMPTY, KEY_INF
+from repro.core.bits import EMPTY, KEY_INF, dup_in_run
+from repro.core.layout import (hash_slot, policy_arrays, spill_arrays,
+                               val_weight)
 from repro.store import exec as exec_
 from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, register,
                              uniform_stats)
 from repro.store.backends import _pow2, finalize_results
 
+POLICIES = ("none", "lru", "size")
+
+
+class SpillTier(NamedTuple):
+    """Cold host-spill tier: append-only sorted runs (`core.layout.
+    spill_arrays`). Each batch that demotes past the warm tier appends ONE
+    sorted run; `run_start[i]` marks run boundaries, `dead` tombstones
+    entries deleted or promoted away, `n` is the append cursor. Cells below
+    `n` are never rewritten — the append-only contract that lets the region
+    live off-device."""
+    keys: jnp.ndarray       # [S] uint64, KEY_INF pad
+    vals: jnp.ndarray       # [S] uint64
+    dead: jnp.ndarray       # [S] bool tombstones
+    run_start: jnp.ndarray  # [S] bool — True at the first entry of each run
+    n: jnp.ndarray          # scalar int32 append cursor
+    n_dead: jnp.ndarray     # scalar int32
+
+
+def spill_init(capacity: int) -> SpillTier:
+    keys, vals, dead, run_start = spill_arrays(capacity)
+    return SpillTier(keys=keys, vals=vals, dead=dead, run_start=run_start,
+                     n=jnp.int32(0), n_dead=jnp.int32(0))
+
+
+def spill_append(sp: SpillTier, keys, vals, mask):
+    """Append the masked lanes as ONE sorted run (in-batch duplicates keep
+    the first lane). Lanes past capacity are dropped (appended=False) — the
+    whole stack is full at that point, the flat backend's
+    allocation-failure analogue. Returns (sp', appended[K])."""
+    K = keys.shape[0]
+    S = sp.keys.shape[0]
+    mask = mask & (keys != KEY_INF)
+    order = jnp.argsort(keys, stable=True)
+    sk, sv, sm = keys[order], vals[order], mask[order]
+    same = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    put = sm & ~dup_in_run(same, sm)
+    rank = jnp.cumsum(put.astype(jnp.int32)) - 1
+    ok = put & (sp.n + rank < S)
+    dest = jnp.where(ok, sp.n + rank, S)
+    nk = sp.keys.at[dest].set(sk, mode="drop")
+    nv = sp.vals.at[dest].set(sv, mode="drop")
+    cnt = jnp.sum(ok).astype(jnp.int32)
+    rs = sp.run_start.at[jnp.where(cnt > 0, sp.n, S)].set(True, mode="drop")
+    inv = jnp.zeros((K,), jnp.int32).at[order].set(
+        jnp.arange(K, dtype=jnp.int32))
+    return sp._replace(keys=nk, vals=nv, run_start=rs, n=sp.n + cnt), ok[inv]
+
+
+def spill_find_ref(sp: SpillTier, queries):
+    """Membership probe over the live run entries: (found[Q], vals[Q]).
+    The jnp reference behind `store.exec.spill_find` — a masked flat
+    compare (the cold tier is the batched/remote path; per-run sorted
+    probes are a follow-up kernel)."""
+    live = ~sp.dead & (sp.keys != KEY_INF)
+    eq = (sp.keys[None, :] == queries[:, None]) & live[None, :]
+    found = jnp.any(eq, axis=1) & (queries != KEY_INF)
+    idx = jnp.argmax(eq, axis=1)
+    return found, jnp.where(found, sp.vals[idx], jnp.uint64(0))
+
+
+def spill_compact(sp: SpillTier) -> SpillTier:
+    """Merge the runs: drop tombstones and rewrite the live entries as ONE
+    sorted run (the batched analogue of an LSM run merge). Triggered by
+    `apply` when tombstones exceed 1/4 of the appended entries — the same
+    threshold discipline as the skiplist's compaction — so churn cannot
+    exhaust the spill capacity while live occupancy is low. Between
+    compactions the append-only contract holds unchanged."""
+    live = ~sp.dead & (sp.keys != KEY_INF)
+    skey = jnp.where(live, sp.keys, KEY_INF)
+    o = jnp.argsort(skey)
+    n_live = jnp.sum(live).astype(jnp.int32)
+    return SpillTier(
+        keys=skey[o],
+        vals=jnp.where(live, sp.vals, jnp.uint64(0))[o],
+        dead=jnp.zeros_like(sp.dead),
+        run_start=jnp.zeros_like(sp.run_start).at[0].set(n_live > 0),
+        n=n_live, n_dead=jnp.int32(0))
+
+
+def spill_discard(sp: SpillTier, keys, mask):
+    """Tombstone live matches (used by DELETE and by promotion). In-batch
+    duplicate lanes for one key dedupe by cell so `n_dead` stays exact.
+    Returns (sp', hit[K])."""
+    K = keys.shape[0]
+    S = sp.keys.shape[0]
+    live = ~sp.dead & (sp.keys != KEY_INF)
+    eq = (sp.keys[None, :] == keys[:, None]) & live[None, :]
+    found = jnp.any(eq, axis=1) & mask & (keys != KEY_INF)
+    cell = jnp.where(found, jnp.argmax(eq, axis=1).astype(jnp.int32), S)
+    o = jnp.argsort(cell, stable=True)
+    cs = cell[o]
+    fdup = jnp.concatenate([jnp.zeros((1,), bool),
+                            cs[1:] == cs[:-1]]) & found[o]
+    inv = jnp.zeros((K,), jnp.int32).at[o].set(jnp.arange(K, dtype=jnp.int32))
+    eff = found & ~fdup[inv]
+    nd = sp.dead.at[jnp.where(eff, cell, S)].set(True, mode="drop")
+    return sp._replace(dead=nd,
+                       n_dead=sp.n_dead + jnp.sum(eff).astype(jnp.int32)), eff
+
 
 class TierState(NamedTuple):
-    hot: ht.FixedHash     # small fixed-slot table (the near/fast tier)
-    cold: dsl.DetSkiplist  # ordered backing store (the far/large tier)
+    hot: ht.FixedHash          # fixed-slot table (the near/fast tier)
+    hot_meta: jnp.ndarray      # [M, B] int32 policy metadata (stamp/weight)
+    clock: jnp.ndarray         # scalar int32 — the LRU batch clock
+    n_evict: jnp.ndarray       # scalar int64 — cumulative policy evictions
+    n_promote: jnp.ndarray     # scalar int64 — cumulative promotions
+    cold: dsl.DetSkiplist      # warm ordered tier (historic field name)
+    spill: Optional[SpillTier]  # cold spill runs; None on 2-tier stacks
+
+
+def _hot_insert_evict(hot: ht.FixedHash, meta, clock, keys, vals, mask,
+                      policy: str, max_evict):
+    """Insert-if-absent into the hot tier, evicting policy victims from
+    full buckets instead of refusing placement. Victims come from the
+    PRE-batch bucket contents (a key placed this batch is never its own
+    batch's victim); empties fill first, then victims in policy order, and
+    lanes beyond bucket width fall through (placed=False). At most
+    `max_evict` lanes evict: the caller passes the lower tiers' free
+    headroom, so a displaced victim ALWAYS has somewhere to land —
+    eviction must never turn into key loss. Lanes past the cap fall
+    through like any unplaced lane and report their own success honestly.
+    Returns (hot', meta', placed[K], existed[K], ev_key[K], ev_val[K],
+    ev_mask[K]) where lane i's ev_* carry the victim its placement
+    displaced."""
+    K = keys.shape[0]
+    M, B = hot.num_slots, hot.bucket
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    p = ht.bucket_insert_plan(hot, keys, vals, mask)  # the SHARED prologue
+    vrows = hot.vals[p.ss]
+    metar = meta[p.ss]
+
+    # victims: pre-batch entries ordered by the policy's evict-first score
+    # (lru: oldest stamp first; size: largest payload first; ties by column)
+    nonempty = p.rows != EMPTY
+    n_empty = jnp.sum(p.rows == EMPTY, axis=1).astype(jnp.int32)
+    ev_rank = p.rank - n_empty
+    score = metar if policy == "lru" else -metar
+    score = jnp.where(nonempty, score, jnp.iinfo(jnp.int32).max)
+    vorder = jnp.argsort(score, axis=1, stable=True)  # [K, B]
+    vcol = jnp.take_along_axis(
+        vorder, jnp.clip(ev_rank, 0, B - 1)[:, None], axis=1)[:, 0]
+    vcol = vcol.astype(jnp.int32)
+    need_ev = p.cand & ~p.fit_e & (ev_rank < jnp.sum(nonempty, axis=1))
+    need_ev = need_ev & (jnp.cumsum(need_ev.astype(jnp.int32)) - 1
+                         < max_evict)
+    ev_key = jnp.take_along_axis(p.rows, vcol[:, None], axis=1)[:, 0]
+    ev_val = jnp.take_along_axis(vrows, vcol[:, None], axis=1)[:, 0]
+
+    placed = (p.cand & p.fit_e) | need_ev
+    col = jnp.where(p.fit_e, p.col_e, vcol)
+    flat = jnp.where(placed, p.ss * B + col, M * B)
+    nk = hot.keys.reshape(-1).at[flat].set(p.sk, mode="drop").reshape(M, B)
+    nv = hot.vals.reshape(-1).at[flat].set(p.sv, mode="drop").reshape(M, B)
+    stamp = (jnp.broadcast_to(clock, (K,)).astype(jnp.int32)
+             if policy == "lru" else val_weight(p.sv))
+    nm = meta.reshape(-1).at[flat].set(stamp, mode="drop").reshape(M, B)
+    if policy == "lru":
+        # an INSERT that finds its key already hot-resident is a touch too:
+        # refresh that cell's stamp so upsert traffic keeps an entry warm
+        ecol = jnp.argmax(p.rows == p.sk[:, None], axis=1).astype(jnp.int32)
+        eflat = jnp.where(p.exists, p.ss * B + ecol, M * B)
+        nm = nm.reshape(-1).at[eflat].set(stamp, mode="drop").reshape(M, B)
+    hot2 = ht.FixedHash(keys=nk, vals=nv,
+                        count=hot.count
+                        + jnp.sum(p.cand & p.fit_e).astype(jnp.int64))
+    return (hot2, nm, placed[p.inv], (p.exists | p.dup)[p.inv],
+            ev_key[p.inv], ev_val[p.inv], need_ev[p.inv])
 
 
 class TieredBackend:
-    """`hash+skiplist`: hot fixed-hash tier over a det-skiplist cold tier."""
+    """The configurable tier stack behind the registry strings
+    `hash+skiplist` (depth 2) and `tiered3[/lru|/size]` (depth 3)."""
 
-    name = "hash+skiplist"
     ordered = True
-    kernelized = True      # hot probe + cold find dispatch to kernels
+    kernelized = True      # hot probe + warm find dispatch to kernels
 
-    def __init__(self, promote: bool = True):
+    def __init__(self, promote: bool = True, depth: int = 2,
+                 policy: str = "none"):
+        assert depth in (2, 3), "2 (hash->skiplist) or 3 (+ host spill)"
+        assert policy in POLICIES, f"policy must be one of {POLICIES}"
         self.promote = promote
+        self.depth = depth
+        self.policy = policy
+        base = "hash+skiplist" if depth == 2 else "tiered3"
+        self.name = base if policy == "none" else f"{base}/{policy}"
 
     def init(self, capacity: int, hot_bucket: int = 8, hot_frac: int = 8,
-             **kw) -> TierState:
-        """Cold tier sized at `capacity`; hot tier at ~capacity/hot_frac."""
+             spill_cap: int | None = None, **kw) -> TierState:
+        """Warm tier sized at `capacity`; hot tier at ~capacity/hot_frac;
+        depth-3 spill runs at `spill_cap` (default `capacity`)."""
         hot_slots = _pow2(max(capacity // (hot_frac * hot_bucket), 1))
-        return TierState(hot=ht.fixed_init(hot_slots, hot_bucket),
-                         cold=dsl.skiplist_init(capacity))
+        return TierState(
+            hot=ht.fixed_init(hot_slots, hot_bucket),
+            hot_meta=policy_arrays((hot_slots, hot_bucket)),
+            clock=jnp.int32(0),
+            n_evict=jnp.int64(0),
+            n_promote=jnp.int64(0),
+            cold=dsl.skiplist_init(capacity),
+            spill=(spill_init(capacity if spill_cap is None else spill_cap)
+                   if self.depth == 3 else None))
+
+    # -- tier movement helpers ----------------------------------------------
+
+    def _demote(self, cold, spill, keys, vals, mask):
+        """Push lanes down: warm skiplist first; lanes the skiplist cannot
+        take (capacity) append to the spill runs (depth 3) or drop (depth 2
+        — the flat backend's allocation-failure analogue)."""
+        cold, ok_c, ex_c = dsl.insert_batch(cold, keys, vals, mask)
+        ok = ok_c | ex_c
+        if spill is not None:
+            spill, ok_s = spill_append(spill, keys, vals, mask & ~ok)
+            ok = ok | ok_s
+        return cold, spill, ok
+
+    def _headroom(self, cold, spill):
+        """Free lower-tier slots = the eviction budget: how many hot
+        victims the warm tier + spill runs can absorb RIGHT NOW. Capping
+        evictions at this keeps demotion lossless — when the stack is
+        genuinely full, the NEW key's lane fails (like the flat backend's
+        allocation failure), never a resident's."""
+        free = (jnp.int32(cold.term_keys.shape[0]) - cold.n_term)
+        if spill is not None:
+            free = free + (jnp.int32(spill.keys.shape[0]) - spill.n)
+        return free
 
     # -- apply ---------------------------------------------------------------
 
     def apply(self, state: TierState, plan: OpPlan):
-        hot, cold = state.hot, state.cold
+        hot, meta, clock = state.hot, state.hot_meta, state.clock
+        cold, spill = state.cold, state.spill
+        n_evict, n_promote = state.n_evict, state.n_promote
         ops, keys, vals = plan.ops, plan.keys, plan.vals
+        K = keys.shape[0]
         valid = plan.mask & (ops >= 0)
         ins_m = valid & (ops == OP_INSERT)
         del_m = valid & (ops == OP_DELETE)
         qk = jnp.where(valid, keys, KEY_INF)
 
-        # INSERTS: insert-if-absent across BOTH tiers; try hot first, spill
-        # bucket-full lanes down to cold (the batched spill path)
-        in_cold, _, _ = exec_.skiplist_find(cold,
-                                            jnp.where(ins_m, keys, KEY_INF))
-        hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals,
-                                               ins_m & ~in_cold)
-        spill = ins_m & ~in_cold & ~ins_hot & ~ex_hot
-        cold, ins_cold, ex_cold = dsl.insert_batch(cold, keys, vals, spill)
-        inserted = ins_hot | ins_cold
-        existed = ex_hot | in_cold | ex_cold
+        # INSERTS: insert-if-absent across ALL tiers; lanes absent
+        # everywhere try hot first (under the policy), the rest fall down
+        ins_k = jnp.where(ins_m, keys, KEY_INF)
+        in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
+        if spill is not None:
+            in_spill, _ = exec_.spill_find(spill, ins_k)
+        else:
+            in_spill = jnp.zeros((K,), bool)
+        try_hot = ins_m & ~in_cold & ~in_spill
+        if self.policy == "none":
+            hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals, try_hot)
+        else:
+            hot, meta, ins_hot, ex_hot, ev_k, ev_v, ev_m = _hot_insert_evict(
+                hot, meta, clock, keys, vals, try_hot, self.policy,
+                self._headroom(cold, spill))
+            n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
+            # victims demote first — the eviction cap guarantees they fit,
+            # so a displaced resident is never the lane that fails
+            cold, spill, _ = self._demote(cold, spill, ev_k, ev_v, ev_m)
+        down = try_hot & ~ins_hot & ~ex_hot
+        cold, spill, down_ok = self._demote(
+            cold, spill, jnp.where(down, keys, KEY_INF), vals, down)
+        inserted = ins_hot | down_ok
+        existed = ex_hot | in_cold | in_spill
 
         # DELETES: the single-tier invariant means exactly one tier can hit
         hot, del_hot = ht.fixed_delete(hot, keys, del_m)
         cold, del_cold = dsl.delete_batch(cold, keys, del_m & ~del_hot)
-        deleted = del_hot | del_cold
+        if spill is not None:
+            spill, del_spill = spill_discard(spill, keys,
+                                             del_m & ~del_hot & ~del_cold)
+        else:
+            del_spill = jnp.zeros((K,), bool)
+        deleted = del_hot | del_cold | del_spill
 
-        # FINDS observe the post-update state of both tiers; the hot probe is
-        # the kernelized fast path (kernels/hash_probe under exec dispatch)
-        f_hot, v_hot = exec_.hash_find(hot, qk)
+        # FINDS observe the post-update state of every tier; the hot probe
+        # is the kernelized fast path and reports the hit column so the LRU
+        # policy can refresh its stamps (exec.hash_find_cols)
+        f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
         f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
-        found = f_hot | f_cold
-        fvals = jnp.where(f_hot, v_hot, v_cold)
+        if spill is not None:
+            f_spill, v_spill = exec_.spill_find(spill, qk)
+        else:
+            f_spill = jnp.zeros((K,), bool)
+            v_spill = jnp.zeros((K,), jnp.uint64)
+        found = f_hot | f_cold | f_spill
+        fvals = jnp.where(f_hot, v_hot, jnp.where(f_cold, v_cold, v_spill))
+        if self.policy == "lru":
+            touch = valid & (ops == OP_FIND) & f_hot
+            tslots = hash_slot(qk, hot.num_slots)
+            cell = jnp.where(touch, tslots * hot.bucket + c_hot,
+                             hot.keys.size)
+            meta = meta.reshape(-1).at[cell].set(
+                jnp.broadcast_to(clock, (K,)).astype(jnp.int32),
+                mode="drop").reshape(meta.shape)
 
         # PROMOTION (after the linearization point; membership-neutral):
-        # cold-served FIND lanes migrate to the hot tier when space allows
+        # warm/spill-served FIND lanes migrate up, displacing policy victims
         if self.promote:
-            prom = valid & (ops == OP_FIND) & f_cold & ~f_hot
-            hot, prom_ok, _ = ht.fixed_insert(hot, keys, v_cold, prom)
-            cold, _ = dsl.delete_batch(cold, keys, prom & prom_ok)
+            prom = valid & (ops == OP_FIND) & found & ~f_hot
+            pv = jnp.where(f_cold, v_cold, v_spill)
+            if self.policy == "none":
+                hot, prom_ok, _ = ht.fixed_insert(hot, keys, pv, prom)
+            else:
+                (hot, meta, prom_ok, _,
+                 ev_k, ev_v, ev_m) = _hot_insert_evict(
+                    hot, meta, clock, keys, pv, prom, self.policy,
+                    self._headroom(cold, spill))
+                n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
+                cold, spill, _ = self._demote(cold, spill, ev_k, ev_v, ev_m)
+            n_promote = n_promote + jnp.sum(prom_ok).astype(jnp.int64)
+            cold, _ = dsl.delete_batch(cold, keys, prom & prom_ok & f_cold)
+            if spill is not None:
+                spill, _ = spill_discard(spill, keys,
+                                         prom & prom_ok & f_spill)
 
-        return TierState(hot=hot, cold=cold), finalize_results(
-            ops, valid, found, fvals, inserted, existed, deleted)
+        # spill-run maintenance: merge runs + drop tombstones at the same
+        # 25% threshold discipline as the skiplist compaction, so churn
+        # (promotions + deletes) cannot exhaust the append cursor while
+        # live occupancy stays low
+        if spill is not None:
+            spill = jax.lax.cond(spill.n_dead * 4 > spill.n, spill_compact,
+                                 lambda s: s, spill)
 
-    # -- ordered scan over both tiers ----------------------------------------
+        state2 = TierState(hot=hot, hot_meta=meta, clock=clock + 1,
+                           n_evict=n_evict, n_promote=n_promote,
+                           cold=cold, spill=spill)
+        return state2, finalize_results(ops, valid, found, fvals, inserted,
+                                        existed, deleted)
+
+    # -- ordered scan over all tiers -----------------------------------------
 
     def scan(self, state: TierState, lo, hi, max_out: int):
         cnt_c, k_c, v_c, val_c = dsl.range_query(state.cold, lo, hi, max_out)
-        hk = state.hot.keys.reshape(-1)
-        hv = state.hot.vals.reshape(-1)
-        in_range = (hk[None, :] >= lo[:, None]) & (hk[None, :] < hi[:, None]) \
-            & (hk[None, :] != EMPTY)
-        count = cnt_c + jnp.sum(in_range, axis=1).astype(cnt_c.dtype)
 
-        # materialize the sorted union, truncated at max_out: sort the hot
-        # in-range entries per query, then merge with the cold slice
-        sk = jnp.where(in_range, hk[None, :], KEY_INF)        # [Q, H]
-        oh = jnp.argsort(sk, axis=1)[:, :max_out]
-        hkeys = jnp.take_along_axis(sk, oh, axis=1)
-        hvals = jnp.take_along_axis(
-            jnp.broadcast_to(hv[None, :], sk.shape), oh, axis=1)
-        ck = jnp.where(val_c, k_c, KEY_INF)
-        allk = jnp.concatenate([ck, hkeys], axis=1)           # [Q, 2*max_out]
-        allv = jnp.concatenate([jnp.where(val_c, v_c, jnp.uint64(0)), hvals],
-                               axis=1)
+        def tier_rows(tk, tv, live):
+            """In-range count + per-query sorted top-max_out of a flat
+            (keys, vals, live) tier view."""
+            in_r = (tk[None, :] >= lo[:, None]) & (tk[None, :] < hi[:, None]) \
+                & live[None, :]
+            cnt = jnp.sum(in_r, axis=1).astype(cnt_c.dtype)
+            sk = jnp.where(in_r, tk[None, :], KEY_INF)
+            o = jnp.argsort(sk, axis=1)[:, :max_out]
+            return (cnt, jnp.take_along_axis(sk, o, axis=1),
+                    jnp.take_along_axis(
+                        jnp.broadcast_to(tv[None, :], sk.shape), o, axis=1))
+
+        hk = state.hot.keys.reshape(-1)
+        cnt_h, hkeys, hvals = tier_rows(hk, state.hot.vals.reshape(-1),
+                                        hk != EMPTY)
+        count = cnt_c + cnt_h
+        parts_k = [jnp.where(val_c, k_c, KEY_INF), hkeys]
+        parts_v = [jnp.where(val_c, v_c, jnp.uint64(0)), hvals]
+        if state.spill is not None:
+            sp = state.spill
+            cnt_s, skeys, svals = tier_rows(sp.keys, sp.vals,
+                                            ~sp.dead & (sp.keys != KEY_INF))
+            count = count + cnt_s
+            parts_k.append(skeys)
+            parts_v.append(svals)
+
+        # materialize the sorted union, truncated at max_out (single-tier
+        # residency means the union has no cross-tier duplicates)
+        allk = jnp.concatenate(parts_k, axis=1)
+        allv = jnp.concatenate(parts_v, axis=1)
         om = jnp.argsort(allk, axis=1)[:, :max_out]
         keys = jnp.take_along_axis(allk, om, axis=1)
         vals = jnp.take_along_axis(allv, om, axis=1)
@@ -134,24 +471,49 @@ class TieredBackend:
     # -- movement / stats ----------------------------------------------------
 
     def flush(self, state: TierState) -> TierState:
-        """Bulk demotion: move every hot entry into the cold tier."""
+        """Bulk demotion: move every hot entry into the warm tier (spill
+        runs absorb warm overflow on depth 3). Entries the lower tiers
+        cannot absorb (stack genuinely full) STAY hot with their metadata —
+        demotion is lossless, same invariant as eviction. Flushed cells'
+        policy metadata is cleared with the keys; the batch clock and the
+        cumulative eviction / promotion counters are PRESERVED — flushing
+        the tier must not erase the policy's history (the
+        hot-tier-exactly-full audit)."""
+        shape = state.hot.keys.shape
         hk = state.hot.keys.reshape(-1)
         hv = state.hot.vals.reshape(-1)
-        cold, _, _ = dsl.insert_batch(state.cold, hk, hv, hk != EMPTY)
-        hot = state.hot._replace(keys=jnp.full_like(state.hot.keys, EMPTY),
-                                 vals=jnp.zeros_like(state.hot.vals),
-                                 count=state.hot.count * 0)
-        return TierState(hot=hot, cold=cold)
+        cold, spill, ok = self._demote(state.cold, state.spill, hk, hv,
+                                       hk != EMPTY)
+        keep = (hk != EMPTY) & ~ok
+        hot = state.hot._replace(
+            keys=jnp.where(keep, hk, EMPTY).reshape(shape),
+            vals=jnp.where(keep, hv, jnp.uint64(0)).reshape(shape),
+            count=jnp.sum(keep).astype(jnp.int64))
+        meta = jnp.where(keep.reshape(shape), state.hot_meta, 0)
+        return state._replace(hot=hot, hot_meta=meta, cold=cold, spill=spill)
 
     def stats(self, state: TierState):
         hot_size = state.hot.count.astype(jnp.int64)
         cold_size = (state.cold.n_term - state.cold.n_marked).astype(jnp.int64)
+        spill_size = jnp.int64(0)
+        spill_dead = jnp.int64(0)
+        capacity = state.hot.keys.size + state.cold.term_keys.shape[0]
+        if state.spill is not None:
+            spill_size = (state.spill.n - state.spill.n_dead).astype(jnp.int64)
+            spill_dead = state.spill.n_dead.astype(jnp.int64)
+            capacity += state.spill.keys.shape[0]
         return uniform_stats(
-            size=hot_size + cold_size,
+            size=hot_size + cold_size + spill_size,
             hot_size=hot_size,
             cold_size=cold_size,
-            tombstones=state.cold.n_marked,
-            capacity=state.hot.keys.size + state.cold.term_keys.shape[0])
+            spill_size=spill_size,
+            tombstones=state.cold.n_marked + spill_dead,
+            evictions=state.n_evict,
+            promotions=state.n_promote,
+            capacity=capacity)
 
 
 HASH_SKIPLIST = register(TieredBackend())
+TIERED3 = register(TieredBackend(depth=3))
+TIERED3_LRU = register(TieredBackend(depth=3, policy="lru"))
+TIERED3_SIZE = register(TieredBackend(depth=3, policy="size"))

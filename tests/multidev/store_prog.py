@@ -28,7 +28,8 @@ AXES = ("pod", "data")
 LANES = 16
 N_SHARDS = 8
 ROUNDS = 4
-BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist")
+BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist",
+            "tiered3/lru")
 
 
 def check_backend(mesh, backend: str) -> None:
@@ -162,6 +163,64 @@ def check_uneven_occupancy(mesh) -> None:
     print(f"UNEVEN-OK per_shard={per_shard} modes=jnp,interpret")
 
 
+def check_tier_residency(mesh, backend: str = "tiered3/lru") -> None:
+    """Eviction determinism under sharding: after the same global op
+    stream, every shard's tier residency — the FULL tier-stack state,
+    including hot keys, policy metadata, warm skiplist, and spill runs —
+    is bit-identical to a direct (engine-less) backend instance applying
+    that shard's per-round sub-plans. Sharding is pure partitioning; the
+    mesh, routing, and pooling cannot change what the policies decide.
+    Run for both exec modes (the 1-device analogue lives in
+    tests/test_tiers3.py)."""
+    from repro.store import get_backend, make_plan
+    from repro.store import exec as exec_
+
+    total = N_SHARDS * LANES
+    rng = np.random.default_rng(77)
+    # per-shard key pools, owner = top 3 bits (the router's partition)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 24, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(ROUNDS):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], size=total,
+                         p=[0.5, 0.4, 0.1]).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)                    # lanes hit arbitrary owners
+        rounds.append((ops, keys))
+
+    init_kw = dict(hot_bucket=4, hot_frac=8)
+    for mode in ("jnp", "interpret"):
+        eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=8,
+                          exec_mode=mode)
+        state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+        put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+        for ops, keys in rounds:
+            state, _, _, dropped = eng.step(state, put(ops), put(keys),
+                                            put(keys + 3))
+            assert int(dropped) == 0, mode
+
+        be = get_backend(backend)
+        for s in range(N_SHARDS):
+            with exec_.exec_mode(mode):
+                direct = be.init(64, **init_kw)
+                for ops, keys in rounds:
+                    owner = (keys >> np.uint64(61)).astype(np.int32)
+                    sel = owner == s
+                    direct, _ = be.apply(direct, make_plan(
+                        ops[sel], keys[sel], keys[sel] + 3))
+            sharded = jax.tree.map(lambda x, s=s: x[s], state)
+            la, lb = jax.tree.leaves(sharded), jax.tree.leaves(direct)
+            assert len(la) == len(lb)
+            for i, (a, b) in enumerate(zip(la, lb)):
+                assert (np.asarray(a) == np.asarray(b)).all(), \
+                    (backend, mode, s, i)
+    print(f"RESIDENCY-OK backend={backend} shards={N_SHARDS} "
+          f"modes=jnp,interpret")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
@@ -169,6 +228,7 @@ def main() -> int:
     for backend in ("det_skiplist", "hash+skiplist"):
         check_range(mesh, backend)
     check_uneven_occupancy(mesh)
+    check_tier_residency(mesh)
     return 0
 
 

@@ -21,3 +21,4 @@ def test_sharded_store_multidevice():
     assert "STORE-OK" in out.stdout
     assert "RANGE-OK" in out.stdout
     assert "UNEVEN-OK" in out.stdout
+    assert "RESIDENCY-OK" in out.stdout

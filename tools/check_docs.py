@@ -1,0 +1,74 @@
+"""Docs-consistency gate (CI step): the docs must name every registered
+store backend string and every benchmark JSON artifact.
+
+Fails (exit 1) when:
+  * a `repro.store` registry string has no mention in docs/*.md — so a new
+    backend cannot ship without at least an index entry, or
+  * a `benchmarks/*.py` Recorder table's ``BENCH_<table>.json`` name is
+    missing from docs/*.md — so artifact names and their docs stay in sync.
+
+Run from anywhere: ``python tools/check_docs.py`` (adds src/ to the path
+itself, like benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def docs_text() -> str:
+    docs_dir = os.path.join(ROOT, "docs")
+    parts = []
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md"):
+            with open(os.path.join(docs_dir, name)) as f:
+                parts.append(f.read())
+    return "\n".join(parts)
+
+
+def bench_artifacts() -> list[str]:
+    """BENCH_<table>.json names derived from Recorder("<table>") calls."""
+    bench_dir = os.path.join(ROOT, "benchmarks")
+    tables = set()
+    for name in sorted(os.listdir(bench_dir)):
+        if not name.endswith(".py"):
+            continue
+        with open(os.path.join(bench_dir, name)) as f:
+            tables.update(re.findall(r"Recorder\(\s*[\"']([^\"']+)[\"']",
+                                     f.read()))
+    return sorted(f"BENCH_{t}.json" for t in tables)
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.store import available_backends
+
+    text = docs_text()
+
+    def mentioned(name: str) -> bool:
+        # standalone mention only: 'tiered3' inside 'tiered3/lru' (or any
+        # future superstring) must NOT count as documentation of 'tiered3'
+        return re.search(rf"(?<![\w+/]){re.escape(name)}(?![\w+/])",
+                         text) is not None
+
+    missing = [f"store backend string {b!r}"
+               for b in available_backends() if not mentioned(b)]
+    missing += [f"benchmark artifact name {a!r}"
+                for a in bench_artifacts() if not mentioned(a)]
+    if missing:
+        print("docs/*.md is missing:", file=sys.stderr)
+        for m in missing:
+            print(f"  - {m}", file=sys.stderr)
+        print("document new backends/artifacts in docs/README.md "
+              "(see its registry + artifact tables)", file=sys.stderr)
+        return 1
+    print(f"docs-consistency OK: {len(available_backends())} backend "
+          f"strings, {len(bench_artifacts())} artifact names")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
