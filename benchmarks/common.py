@@ -21,7 +21,15 @@ import numpy as np
 import jax
 
 
-def bench(fn, *args, iters: int = 5, warmup: int = 2):
+# shared repeat discipline: every timed number is the median of
+# DEFAULT_ITERS calls after DEFAULT_WARMUP discarded warmup calls; the
+# Recorder stamps these into the JSON metadata so two bench artifacts are
+# comparable (tools/bench_diff.py) without guessing the protocol.
+DEFAULT_ITERS = 5
+DEFAULT_WARMUP = 2
+
+
+def bench(fn, *args, iters: int = DEFAULT_ITERS, warmup: int = DEFAULT_WARMUP):
     """Median wall seconds per call of a jitted fn (blocks on outputs)."""
     for _ in range(warmup):
         out = fn(*args)
@@ -40,11 +48,17 @@ def emit(name: str, seconds_per_call: float, derived: str):
 
 
 class Recorder:
-    """Collects benchmark rows for one table; CSV to stdout, JSON to disk."""
+    """Collects benchmark rows for one table; CSV to stdout, JSON to disk.
 
-    def __init__(self, table: str):
+    `meta` lands in the JSON payload next to the platform fields — tables
+    use it to record their measurement protocol (exec modes exercised,
+    repeat count, warmup discard) so artifacts are self-describing."""
+
+    def __init__(self, table: str, **meta):
         self.table = table
         self.rows: list[dict] = []
+        self.meta: dict = {"bench_iters": DEFAULT_ITERS,
+                           "warmup_discard": DEFAULT_WARMUP, **meta}
 
     def record(self, name: str, seconds_per_call: float, **derived):
         """One measurement. `derived` values should be plain numbers/strings
@@ -64,6 +78,7 @@ class Recorder:
             "jax_backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "unix_time": time.time(),
+            **self.meta,
             "rows": self.rows,
         }
         with open(path, "w") as f:

@@ -1,13 +1,21 @@
 """Execution-layer probe benchmark: jnp reference vs Pallas kernel timings
-for the two kernelized probes (deterministic-skiplist search, fixed-hash
-bucket probe), across every runnable `repro.store.exec` mode.
+for the kernelized probes (deterministic-skiplist search, fixed-hash
+bucket probe), across every runnable `repro.store.exec` mode — plus the
+FUSED tier find (`exec.tier_find`, one dispatch across all three §IX
+tiers) against the unfused three-dispatch chain on the same preloaded
+tier-stack state. Fused/unfused rows carry their measured exec-dispatch
+count per plan (`exec.measure_dispatches`) next to the wall time, so the
+artifact shows the dispatch reduction the fusion buys, not just the
+timing.
 
 On CPU, `interpret` measures the Pallas interpreter (a correctness path, so
 it is expected to LOSE to jnp — the number documents the overhead); on TPU
 the `pallas` rows are the production hot path. Results are bit-identical in
 every mode by contract, so these rows are a pure perf comparison.
 
-`run(out_dir=...)` writes machine-readable BENCH_probe_modes.json.
+`run(out_dir=...)` writes machine-readable BENCH_probe_modes.json (rows +
+exec-mode/repeat/warmup metadata; diff two artifacts with
+tools/bench_diff.py).
 """
 from __future__ import annotations
 
@@ -17,19 +25,31 @@ import jax
 from benchmarks.common import Recorder, bench, finish, keys64
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
+from repro.store import get_backend, make_plan
 from repro.store import exec as exec_
+from repro.store.api import OP_INSERT
 
 CAP = 1 << 13
 PRELOAD = CAP // 2
 QUERIES = 1024
 HASH_SLOTS = 1 << 9
 BUCKET = 8
+TIER_CAP = 512           # tier-stack warm capacity for the fused rows
+TIER_PRELOAD = 900       # past warm capacity -> all three tiers live
+
+
+def _unfused_chain(hot, cold, spill, q, mode):
+    """The pre-fusion FIND path: one dispatch per tier."""
+    f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, q, mode)
+    f_cold, v_cold, _ = exec_.skiplist_find(cold, q, mode)
+    f_sp, v_sp = exec_.spill_find(spill, q, mode)
+    return f_hot, v_hot, c_hot, f_cold, v_cold, f_sp, v_sp
 
 
 def run(out_dir: str | None = None):
-    rec = Recorder("probe_modes")
-    rng = np.random.default_rng(7)
     modes = exec_.runnable_modes()
+    rec = Recorder("probe_modes", exec_modes=list(modes))
+    rng = np.random.default_rng(7)
 
     # deterministic skiplist: preload, then time the batched FIND per mode
     base = keys64(rng, PRELOAD)
@@ -56,6 +76,40 @@ def run(out_dir: str | None = None):
         rec.record(f"probe/hash_find/mode={mode}", t / QUERIES,
                    ops_per_sec=QUERIES / t, queries=QUERIES,
                    slots=HASH_SLOTS, bucket=BUCKET, mode=mode)
+
+    # fused tier find vs the unfused three-dispatch chain, on a tiered3
+    # state preloaded past the warm tier so all three tiers answer queries
+    be = get_backend("tiered3")
+    st = be.init(TIER_CAP)
+    pool = np.unique(rng.integers(1, 2**62, TIER_PRELOAD + TIER_PRELOAD // 4,
+                                  dtype=np.uint64))[:TIER_PRELOAD]
+    preload_step = jax.jit(be.apply)
+    for chunk in np.array_split(pool, 4):
+        st, _ = preload_step(st, make_plan(
+            np.full(len(chunk), OP_INSERT, np.int32), chunk, chunk + 1))
+    tq = jax.numpy.concatenate([jax.numpy.asarray(pool[:QUERIES // 2]),
+                                keys64(rng, QUERIES // 2)])
+    hot, cold, spill = st.hot, st.cold, st.spill
+    for mode in modes:
+        # the jitted probe traces exactly once inside bench's warmup, so
+        # the meter reads dispatches per plan directly (1 vs tier depth)
+        with exec_.measure_dispatches() as md:
+            # return every tier's outputs so XLA cannot dead-code a probe
+            fused = jax.jit(lambda h_, c_, s_, q, m=mode:
+                            exec_.tier_find(h_, c_, s_, q, m))
+            t_f = bench(lambda: fused(hot, cold, spill, tq))
+        rec.record(f"probe/tier_find/fused/mode={mode}", t_f / QUERIES,
+                   ops_per_sec=QUERIES / t_f, queries=QUERIES,
+                   preload=TIER_PRELOAD, mode=mode, fused="yes",
+                   dispatches_per_plan=md.n)
+        with exec_.measure_dispatches() as md:
+            unf = jax.jit(lambda h_, c_, s_, q, m=mode:
+                          _unfused_chain(h_, c_, s_, q, m))
+            t_u = bench(lambda: unf(hot, cold, spill, tq))
+        rec.record(f"probe/tier_find/unfused/mode={mode}", t_u / QUERIES,
+                   ops_per_sec=QUERIES / t_u, queries=QUERIES,
+                   preload=TIER_PRELOAD, mode=mode, fused="no",
+                   dispatches_per_plan=md.n)
 
     finish(rec, out_dir)
     return rec

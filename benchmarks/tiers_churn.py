@@ -12,9 +12,15 @@ Rows land in ``BENCH_tiers.json`` (`benchmarks.common.Recorder`; CI runs
 this in smoke mode and uploads the artifact). Derived fields record the
 final tier residency and the cumulative eviction/promotion counters, so
 the JSON shows WHERE the policies put the data, not just how fast the
-batch ran. On CPU the `interpret` rows measure Pallas-interpreter overhead
-(expected to lose to `jnp`); `pallas` rows appear on TPU. Results are
-bit-identical across modes and backends by the store contract, so every
+batch ran. Since the fused tier find, the tiered rows run BOTH probe
+paths: the registered backends (fused — one `exec.tier_find` dispatch per
+probe phase) and an unfused `TieredBackend(fused=False)` twin of each (the
+original dispatch-per-tier chain), with the measured exec-dispatch count
+per churn plan in every row — the fused-vs-unfused comparison is the
+dispatch reduction AND its wall-time effect on one table. On CPU the
+`interpret` rows measure Pallas-interpreter overhead (expected to lose to
+`jnp`); `pallas` rows appear on TPU. Results are bit-identical across
+modes, backends, and probe paths by the store contract, so every
 comparison here is purely about performance and residency.
 """
 from __future__ import annotations
@@ -25,6 +31,7 @@ import jax
 from benchmarks.common import Recorder, bench, finish
 from repro.store import OP_DELETE, OP_FIND, OP_INSERT, get_backend, make_plan
 from repro.store import exec as exec_
+from repro.store.tiers import unfused_twin
 
 CAP = 512            # tiered3 warm-tier capacity (hot ~CAP/8, spill CAP)
 PRELOAD = 900        # past the warm capacity -> the spill runs are live
@@ -36,6 +43,8 @@ ROUNDS = 4           # preload batches
 # warm tier, the 3-tier stacks overflow into their spill runs by design
 BACKENDS = {"det_skiplist": 1088, "hash+skiplist": 1024, "tiered3": CAP,
             "tiered3/lru": CAP, "tiered3/size": CAP}
+# tier stacks also run as unfused twins (same semantics, dispatch per tier)
+TIERED = ("hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size")
 
 
 def _streams(rng):
@@ -55,27 +64,38 @@ def _streams(rng):
 
 
 def run(out_dir: str | None = None):
-    rec = Recorder("tiers")
+    rec = Recorder("tiers", exec_modes=list(exec_.runnable_modes()))
     rng = np.random.default_rng(23)
     preload, churn = _streams(rng)
-    for name, cap in BACKENDS.items():
-        be = get_backend(name)
+    variants = []
+    for name in BACKENDS:
+        variants.append((name, "", get_backend(name)))
+        if name in TIERED:
+            variants.append((name, "/unfused", unfused_twin(name)))
+    for name, tag, be in variants:
+        cap = BACKENDS[name]
         for mode in exec_.runnable_modes():
             with exec_.exec_mode(mode):
                 st = be.init(cap)
-                step = jax.jit(be.apply)
-                for chunk in preload:
-                    st, _ = step(st, make_plan(
-                        np.full(len(chunk), OP_INSERT, np.int32), chunk,
-                        chunk + 1))
+                with exec_.measure_dispatches() as md:
+                    step = jax.jit(be.apply)
+                    for chunk in preload:
+                        st, _ = step(st, make_plan(
+                            np.full(len(chunk), OP_INSERT, np.int32), chunk,
+                            chunk + 1))
                 stats = {k: int(v) for k, v in be.stats(st).items()}
                 assert stats["size"] == PRELOAD, (name, stats)
+                # dispatches per plan, read off the single preload trace
+                dispatches = md.n
                 st, _ = step(st, churn)      # settle residency post-churn
                 t = bench(lambda: step(st, churn))
                 stats = {k: int(v) for k, v in be.stats(st).items()}
-            rec.record(f"tiers/churn/backend={name}/mode={mode}",
+            rec.record(f"tiers/churn/backend={name}{tag}/mode={mode}",
                        t / WIDTH, ops_per_sec=WIDTH / t, width=WIDTH,
                        preload=PRELOAD, backend=name, mode=mode,
+                       fused=("no" if tag else
+                              "yes" if name in TIERED else "flat"),
+                       dispatches_per_plan=dispatches,
                        hot_size=stats["hot_size"],
                        cold_size=stats["cold_size"],
                        spill_size=stats["spill_size"],

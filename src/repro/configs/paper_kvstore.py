@@ -25,7 +25,10 @@ def tiered():
 def tiered3(policy: str = "lru"):
     """The three-deep §IX stack (hash -> skiplist -> host spill) with a
     hot-tier eviction policy ("lru" | "size"; "none" = spill-only). Results
-    stay bit-identical to every other backend; residency is what changes."""
+    stay bit-identical to every other backend; residency is what changes.
+    The registered tier stacks probe through the FUSED tier-find path (one
+    exec dispatch per plan across all tiers — docs/tiers.md); construct
+    `TieredBackend(fused=False)` directly for the unfused chain."""
     name = "tiered3" if policy == "none" else f"tiered3/{policy}"
     return CONFIG.replace(store_backend=name)
 

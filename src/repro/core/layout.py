@@ -37,7 +37,12 @@ Conventions:
 * **Spill runs** — `spill_arrays` allocates the cold host-spill tier: flat
   append-only key/value planes (`kv_arrays` conventions) plus tombstone and
   run-boundary marks. Each batch that spills appends one SORTED run;
-  membership is a masked compare, scans merge the runs (store/tiers.py).
+  membership is a per-run binary search over the `run_offsets` boundary
+  plane (O(runs * log run-len); scans merge the runs — store/tiers.py).
+  The live run count is capped at `MAX_SPILL_RUNS` (the tier compacts
+  before the cap can be exceeded), which is what gives every probe path —
+  jnp reference, Pallas interpret, compiled — a STATIC run-boundary plane
+  to search over.
 
 Pure layout, no execution: the probe loops over these shapes live in
 `repro.kernels.*` and are dispatched by `repro.store.exec`.
@@ -122,6 +127,54 @@ def spill_arrays(capacity: int):
     return keys, vals, jnp.zeros((capacity,), bool), jnp.zeros((capacity,), bool)
 
 
+# MAX_SPILL_RUNS: the static cap on live sorted runs in a spill tier. The
+# probe paths (jnp reference AND the fused tier-find kernel) binary-search
+# each run through a fixed-size `run_offsets` boundary plane, so the cap is
+# what makes the probe a static-shape program; the tier stack enforces it by
+# compacting (merging all runs into one) before an `apply`/`flush` could
+# push the count past the cap (store/tiers.py appends at most 3 runs per
+# apply, 1 per flush).
+MAX_SPILL_RUNS = 16
+
+
+def run_offsets(run_start: jnp.ndarray, n: jnp.ndarray,
+                max_runs: int = MAX_SPILL_RUNS) -> jnp.ndarray:
+    """The run-boundary plane: int32 [max_runs + 1] where entry r is the
+    start cell of sorted run r (runs in append order) and every entry past
+    the live run count — including the final sentinel — is the append
+    cursor `n`. Run r therefore spans cells [off[r], off[r + 1]), empty for
+    padded runs, which is exactly the loop bound the per-run binary search
+    wants. Precondition (maintained by the tier stack): at most `max_runs`
+    live runs, and `run_start[0]` is set whenever n > 0."""
+    S = run_start.shape[0]
+    idx = jnp.arange(S, dtype=jnp.int32)
+    rid = jnp.cumsum(run_start.astype(jnp.int32)) - 1
+    ok = run_start & (idx < n) & (rid < max_runs)
+    tgt = jnp.where(ok, rid, max_runs + 1)       # out of bounds -> dropped
+    return jnp.full((max_runs + 1,), n, jnp.int32).at[tgt].min(
+        idx, mode="drop")
+
+
+class SpillLayout(NamedTuple):
+    """A spill tier's probe view in kernel conventions: (hi, lo) u32 key
+    planes, int8 tombstones, and the `run_offsets` boundary plane. Values
+    stay outside (u64 gathers happen on the host path, like every other
+    kernel wrapper)."""
+    key_hi: jnp.ndarray    # [S] uint32
+    key_lo: jnp.ndarray    # [S] uint32
+    dead: jnp.ndarray      # [S] int8 tombstones
+    run_off: jnp.ndarray   # [MAX_SPILL_RUNS + 1] int32 run boundaries
+
+
+def spill_layout(keys: jnp.ndarray, dead: jnp.ndarray,
+                 run_start: jnp.ndarray, n: jnp.ndarray,
+                 max_runs: int = MAX_SPILL_RUNS) -> SpillLayout:
+    """SpillTier planes -> kernel layout (see `run_offsets`)."""
+    kh, kl = split_u64(keys)
+    return SpillLayout(key_hi=kh, key_lo=kl, dead=dead.astype(jnp.int8),
+                       run_off=run_offsets(run_start, n, max_runs))
+
+
 # ---------------------------------------------------------------------------
 # the (hi, lo) u32 key convention
 # ---------------------------------------------------------------------------
@@ -137,6 +190,13 @@ def key_leq(qh, ql, kh, kl):
     comparison every kernel uses, so parity with the u64 reference paths is
     by construction."""
     return (qh < kh) | ((qh == kh) & (ql <= kl))
+
+
+def key_lt(ah, al, bh, bl):
+    """Lexicographic (hi, lo) strict < — bitwise-equal to u64 compare. The
+    binary-search step of the searchsorted-style kernels (spill runs,
+    split-order tables): `side="left"` semantics need strict less-than."""
+    return (ah < bh) | ((ah == bh) & (al < bl))
 
 
 # ---------------------------------------------------------------------------

@@ -23,18 +23,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _hp_kernel(qh_ref, ql_ref, slot_ref, kh_ref, kl_ref, found_ref, col_ref):
-    qh = qh_ref[...]
-    ql = ql_ref[...]
-    s = slot_ref[...]
-    t = qh.shape[0]
-    m, b = kh_ref.shape
-    s = jnp.clip(s, 0, m - 1)
-    rows_h = jnp.take(kh_ref[...], s, axis=0)          # [T, B] bucket gather
-    rows_l = jnp.take(kl_ref[...], s, axis=0)
+def bucket_probe(qh, ql, slots, key_hi, key_lo):
+    """The in-kernel bucket probe body: one dynamic row gather + one vector
+    compare. Shared with the fused tier-find kernel (`kernels/tier_find`),
+    so the hot-tier compare rule has exactly one implementation. Returns
+    (hit bool[T], col i32[T]); col of a miss is the argmax convention
+    (first column), callers mask by hit."""
+    m = key_hi.shape[0]
+    s = jnp.clip(slots, 0, m - 1)
+    rows_h = jnp.take(key_hi, s, axis=0)               # [T, B] bucket gather
+    rows_l = jnp.take(key_lo, s, axis=0)
     hit = (rows_h == qh[:, None]) & (rows_l == ql[:, None])
-    found_ref[...] = jnp.any(hit, axis=1).astype(jnp.int8)
-    col_ref[...] = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    return jnp.any(hit, axis=1), jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+
+def _hp_kernel(qh_ref, ql_ref, slot_ref, kh_ref, kl_ref, found_ref, col_ref):
+    hit, col = bucket_probe(qh_ref[...], ql_ref[...], slot_ref[...],
+                            kh_ref[...], kl_ref[...])
+    found_ref[...] = hit.astype(jnp.int8)
+    col_ref[...] = col
 
 
 def hash_probe_tiles(q_hi, q_lo, slots, key_hi, key_lo, *, tile: int = 256,

@@ -27,22 +27,24 @@ from jax.experimental import pallas as pl
 from repro.core.layout import key_leq as _le
 
 
-def _sk_kernel(qh_ref, ql_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
-               tm_ref, found_ref, idx_ref, *, levels: int, fanout: int):
-    qh = qh_ref[...]
-    ql = ql_ref[...]
+def level_walk(qh, ql, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo,
+               term_mark, *, levels: int, fanout: int):
+    """The in-kernel level-major descent body: exactly `levels` steps of
+    fan-out-`fanout` probes down to the terminal level. Shared with the
+    fused tier-find kernel (`kernels/tier_find`), so the warm-tier walk has
+    exactly one implementation. Returns (found bool[T], term idx i32[T])."""
     t = qh.shape[0]
-    c1 = lh_ref.shape[1]
-    cap = th_ref.shape[0]
+    c1 = lvl_hi.shape[1]
+    cap = term_hi.shape[0]
 
     # top probe
-    ok = _le(qh[:, None], ql[:, None], lh_ref[levels - 1, :fanout][None, :],
-             ll_ref[levels - 1, :fanout][None, :])
+    ok = _le(qh[:, None], ql[:, None], lvl_hi[levels - 1, :fanout][None, :],
+             lvl_lo[levels - 1, :fanout][None, :])
     i = jnp.argmax(ok, axis=1).astype(jnp.int32)
     for r in range(levels - 1, -1, -1):
-        start = jnp.take(lc_ref[r], jnp.clip(i, 0, c1 - 1), axis=0)
-        bh = th_ref[...] if r == 0 else lh_ref[r - 1]
-        bl = tl_ref[...] if r == 0 else ll_ref[r - 1]
+        start = jnp.take(lvl_child[r], jnp.clip(i, 0, c1 - 1), axis=0)
+        bh = term_hi if r == 0 else lvl_hi[r - 1]
+        bl = term_lo if r == 0 else lvl_lo[r - 1]
         hi = bh.shape[0]
         idx = jnp.clip(start[:, None] + jax.lax.broadcasted_iota(
             jnp.int32, (t, fanout), 1), 0, hi - 1)
@@ -52,10 +54,18 @@ def _sk_kernel(qh_ref, ql_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
         sel = jnp.argmax(ok, axis=1).astype(jnp.int32)
         i = start + sel
     i = jnp.clip(i, 0, cap - 1)
-    fh = jnp.take(th_ref[...], i, axis=0)
-    fl = jnp.take(tl_ref[...], i, axis=0)
-    fm = jnp.take(tm_ref[...], i, axis=0)
-    found_ref[...] = ((fh == qh) & (fl == ql) & (fm == 0)).astype(jnp.int8)
+    fh = jnp.take(term_hi, i, axis=0)
+    fl = jnp.take(term_lo, i, axis=0)
+    fm = jnp.take(term_mark, i, axis=0)
+    return (fh == qh) & (fl == ql) & (fm == 0), i
+
+
+def _sk_kernel(qh_ref, ql_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
+               tm_ref, found_ref, idx_ref, *, levels: int, fanout: int):
+    found, i = level_walk(qh_ref[...], ql_ref[...], lh_ref[...], ll_ref[...],
+                          lc_ref[...], th_ref[...], tl_ref[...], tm_ref[...],
+                          levels=levels, fanout=fanout)
+    found_ref[...] = found.astype(jnp.int8)
     idx_ref[...] = i
 
 

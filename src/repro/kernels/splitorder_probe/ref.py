@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the per-table searchsorted probe, over the same
+(hi, lo) plane layout the kernel consumes. The production jnp reference is
+`core.splitorder.twolevel_splitorder_find` (u64 arrays); this oracle
+exists so the kernel's plane-level compare/window logic can be tested in
+isolation, like `kernels.hash_probe.ref`."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layout import key_lt
+
+
+def splitorder_probe_ref(q_rk_hi, q_rk_lo, q_key_hi, q_key_lo, tables,
+                         rk_hi, rk_lo, key_hi, key_lo, window: int = 4):
+    """Same contract as kernel.splitorder_probe_tiles, bool found."""
+    t = q_rk_hi.shape[0]
+    n_tables, c2 = rk_hi.shape
+    tbl = jnp.clip(tables, 0, n_tables - 1)
+    rows_rh, rows_rl = rk_hi[tbl], rk_lo[tbl]            # [T, C2]
+    ge = ~key_lt(rows_rh, rows_rl, q_rk_hi[:, None], q_rk_lo[:, None])
+    pos = jnp.where(jnp.any(ge, axis=1), jnp.argmax(ge, axis=1), c2)
+    pos = pos.astype(jnp.int32)                          # searchsorted left
+    idx = jnp.clip(pos[:, None] + jnp.arange(window, dtype=jnp.int32),
+                   0, c2 - 1)
+    rows = jnp.arange(t)[:, None]
+    hit = (rows_rh[rows, idx] == q_rk_hi[:, None]) \
+        & (rows_rl[rows, idx] == q_rk_lo[:, None]) \
+        & (key_hi[tbl[:, None], idx] == q_key_hi[:, None]) \
+        & (key_lo[tbl[:, None], idx] == q_key_lo[:, None])
+    found = jnp.any(hit, axis=1)
+    at = jnp.clip(pos + jnp.argmax(hit, axis=1).astype(jnp.int32), 0, c2 - 1)
+    return found, at

@@ -1,0 +1,161 @@
+"""Fused tier-find — one Pallas dispatch across all three §IX tiers.
+
+The unfused FIND path of the tier stack issues one dispatch per tier per
+plan: hot bucket probe, warm skiplist walk, cold spill membership. That is
+three memory-system round trips for what is logically ONE lookup whose
+later stages only matter on a miss — exactly the repeated-dispatch overhead
+the paper's hierarchy exists to avoid (hot keys answered in the fast tier,
+cold accesses batched). This kernel fuses the chain: per query tile, ONE
+`pallas_call` probes the hot fixed-hash buckets, falls misses through a
+level-major walk of the warm skiplist, and finishes with a per-run binary
+search over the cold spill tier's `run_offsets` boundaries. The dispatch
+count of a FIND plan becomes independent of tier depth.
+
+TPU mapping (all three tier layouts are VMEM-resident via whole-array
+BlockSpecs; the per-tile VMEM budget is the sum of the three planes — see
+docs/tiers.md for the worked budget):
+  * hot: `core.layout.bucket_layout` [M, B] u32 planes; the probe body is
+    `kernels.hash_probe.kernel.bucket_probe` — shared, not copied.
+  * warm: `core.layout.skiplist_layout` [L, C1] u32/i32 level stack + flat
+    [C] terminal planes; the walk body is
+    `kernels.skiplist_search.kernel.level_walk` — shared, not copied.
+  * cold: `core.layout.spill_layout` [S] u32 key planes + i8 tombstones +
+    the [MAX_SPILL_RUNS + 1] i32 `run_offsets` plane. Each run is binary
+    searched with `key_lt` (searchsorted "left" semantics), a static
+    runs x log2(S) loop — the run cap is what makes this static-shape.
+  * 64-bit keys travel as (hi, lo) u32 planes; all value gathers happen
+    outside the kernel where u64 lanes exist (ops.py), and the tier
+    fall-through masking (warm only counts on hot miss, spill only on
+    hot+warm miss) also lives in the dispatch layer so the jnp reference
+    shares it verbatim.
+
+Outputs are per-tier raw probe results: (hot hit i8, hot col i32,
+warm found i8, warm terminal idx i32[, spill found i8, spill cell i32]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import key_lt as _lt
+from repro.kernels.hash_probe.kernel import bucket_probe
+from repro.kernels.skiplist_search.kernel import level_walk
+
+
+def spill_run_probe(qh, ql, sp_hi, sp_lo, sp_dead, run_off, *,
+                    max_runs: int, steps: int):
+    """The in-kernel cold-tier probe body: binary search each sorted run
+    [off[r], off[r+1]) for the query, first live match wins (at most one
+    exists under the single-tier-residency invariant; the tie-break keeps
+    pathological states deterministic). All runs are searched in PARALLEL
+    as one [T, R] tile — the loop is `steps` (= ceil(log2(S))) wide-gather
+    iterations, not runs x steps sequential ones, mirroring the jnp
+    reference's vectorization (`kernels.tier_find.ref.spill_find_runs`).
+    Returns (found bool[T], cell i32[T])."""
+    t = qh.shape[0]
+    s = sp_hi.shape[0]
+    r = max_runs
+    lo = jnp.broadcast_to(run_off[:r][None, :], (t, r)).astype(jnp.int32)
+    end = jnp.broadcast_to(run_off[1:r + 1][None, :], (t, r)).astype(jnp.int32)
+    hi = end
+    qh2, ql2 = qh[:, None], ql[:, None]
+    for _ in range(steps):
+        cont = lo < hi
+        mid = jnp.clip((lo + hi) // 2, 0, s - 1)
+        mh = jnp.take(sp_hi, mid.reshape(-1), axis=0).reshape(t, r)
+        ml = jnp.take(sp_lo, mid.reshape(-1), axis=0).reshape(t, r)
+        less = _lt(mh, ml, qh2, ql2)            # sp[mid] < q
+        lo = jnp.where(cont & less, mid + 1, lo)
+        hi = jnp.where(cont & ~less, mid, hi)
+    pos = jnp.clip(lo, 0, s - 1)
+    p_hi = jnp.take(sp_hi, pos.reshape(-1), axis=0).reshape(t, r)
+    p_lo = jnp.take(sp_lo, pos.reshape(-1), axis=0).reshape(t, r)
+    p_dead = jnp.take(sp_dead, pos.reshape(-1), axis=0).reshape(t, r)
+    live = (lo < end) & (p_hi == qh2) & (p_lo == ql2) & (p_dead == 0)
+    found = jnp.any(live, axis=1)
+    first = jnp.argmax(live, axis=1).astype(jnp.int32)   # first live run
+    flat = jax.lax.broadcasted_iota(jnp.int32, (t,), 0) * r + first
+    cell = jnp.take(pos.reshape(-1), flat, axis=0)
+    return found, cell
+
+
+def _tf_kernel(*refs, levels: int, fanout: int, has_spill: bool,
+               max_runs: int, spill_steps: int):
+    (qh_ref, ql_ref, slot_ref, kh_ref, kl_ref,
+     lh_ref, ll_ref, lc_ref, th_ref, tl_ref, tm_ref) = refs[:11]
+    if has_spill:
+        sph_ref, spl_ref, spd_ref, off_ref = refs[11:15]
+        outs = refs[15:]
+    else:
+        outs = refs[11:]
+    qh = qh_ref[...]
+    ql = ql_ref[...]
+
+    hot_hit, hot_col = bucket_probe(qh, ql, slot_ref[...], kh_ref[...],
+                                    kl_ref[...])
+    outs[0][...] = hot_hit.astype(jnp.int8)
+    outs[1][...] = hot_col
+
+    warm_found, warm_idx = level_walk(qh, ql, lh_ref[...], ll_ref[...],
+                                      lc_ref[...], th_ref[...], tl_ref[...],
+                                      tm_ref[...], levels=levels,
+                                      fanout=fanout)
+    outs[2][...] = warm_found.astype(jnp.int8)
+    outs[3][...] = warm_idx
+
+    if has_spill:
+        sp_found, sp_cell = spill_run_probe(
+            qh, ql, sph_ref[...], spl_ref[...], spd_ref[...], off_ref[...],
+            max_runs=max_runs, steps=spill_steps)
+        outs[4][...] = sp_found.astype(jnp.int8)
+        outs[5][...] = sp_cell
+
+
+def tier_find_tiles(q_hi, q_lo, slots, key_hi, key_lo, lvl_hi, lvl_lo,
+                    lvl_child, term_hi, term_lo, term_mark, sp_hi=None,
+                    sp_lo=None, sp_dead=None, run_off=None, *,
+                    tile: int = 256, interpret: bool = True):
+    """q_*: [T] u32; slots: [T] i32; key_*: [M, B]; lvl_*: [L, C1];
+    term_*: [C]; sp_*: [S] (+ run_off [R+1] i32) or None for a 2-tier
+    stack. Returns (hot i8[T], col i32[T], warm i8[T], idx i32[T]) plus
+    (spill i8[T], cell i32[T]) when the spill planes are given."""
+    t = q_hi.shape[0]
+    L, _ = lvl_hi.shape
+    has_spill = sp_hi is not None
+    n_out = 6 if has_spill else 4
+    if t == 0:   # empty batch: same contract as the jnp references
+        z8 = jnp.zeros((0,), jnp.int8)
+        z32 = jnp.zeros((0,), jnp.int32)
+        return (z8, z32, z8, z32, z8, z32)[:n_out]
+    tile = min(tile, t)
+    assert t % tile == 0
+    grid = (t // tile,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+    qspec = pl.BlockSpec((tile,), lambda g: (g,))
+
+    ins = [q_hi, q_lo, slots, key_hi, key_lo,
+           lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark]
+    in_specs = [qspec, qspec, qspec] + [whole(a) for a in ins[3:]]
+    max_runs = spill_steps = 0
+    if has_spill:
+        ins += [sp_hi, sp_lo, sp_dead, run_off]
+        in_specs += [whole(sp_hi), whole(sp_lo), whole(sp_dead),
+                     whole(run_off)]
+        max_runs = run_off.shape[0] - 1
+        spill_steps = max(sp_hi.shape[0].bit_length(), 1)
+
+    out_dtypes = ([jnp.int8, jnp.int32] * 3)[:n_out]
+    kernel = functools.partial(_tf_kernel, levels=L, fanout=4,
+                               has_spill=has_spill, max_runs=max_runs,
+                               spill_steps=spill_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((tile,), lambda g: (g,))] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((t,), d) for d in out_dtypes],
+        interpret=interpret,
+    )(*ins)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused tier find: the SAME per-tier probes the
+unfused chain uses (`core.hashtable.fixed_find_cols`,
+`core.det_skiplist.find_batch`) plus the per-run spill searchsorted —
+which is also the jnp implementation behind `store.exec.spill_find`, so
+all three exec modes share the O(runs * log run-len) cold-tier algorithm
+instead of the old O(S) masked flat compare.
+
+Returns RAW per-tier results (no fall-through masking): the dispatch layer
+(`store.exec.tier_find`) applies the miss fall-through identically to the
+kernel path and to this reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bits import KEY_INF
+from repro.core.layout import MAX_SPILL_RUNS, run_offsets
+
+
+def spill_run_cells(keys, dead, run_start, n, queries,
+                    max_runs: int = MAX_SPILL_RUNS):
+    """Per-run binary-searched LIVE-cell lookup over the spill planes:
+    (found[Q] bool, cell[Q] i32). Each sorted run [off[r], off[r+1]) is
+    searched with `searchsorted`-left semantics; the first live match wins
+    (at most one exists under single-tier residency — the tie-break keeps
+    pathological states deterministic). O(runs * log run-len) per query
+    against the old flat compare's O(S); bit-identical to it by
+    construction. Shared by the membership probe (`spill_find_runs`) and
+    the tombstone path (`store.tiers.spill_discard`), so the cold tier has
+    ONE search algorithm. Cell of a miss is unspecified."""
+    q = queries.shape[0]
+    s = keys.shape[0]
+    off = run_offsets(run_start, n, max_runs)
+    lo = jnp.broadcast_to(off[:-1][None, :], (q, max_runs)).astype(jnp.int32)
+    end = jnp.broadcast_to(off[1:][None, :], (q, max_runs)).astype(jnp.int32)
+    hi = end
+    for _ in range(max(s.bit_length(), 1)):
+        cont = lo < hi
+        mid = jnp.clip((lo + hi) // 2, 0, s - 1)
+        less = keys[mid] < queries[:, None]
+        lo = jnp.where(cont & less, mid + 1, lo)
+        hi = jnp.where(cont & ~less, mid, hi)
+    pos = jnp.clip(lo, 0, s - 1)
+    live = (lo < end) & (keys[pos] == queries[:, None]) & ~dead[pos]
+    found = jnp.any(live, axis=1) & (queries != KEY_INF)
+    cell = pos[jnp.arange(q), jnp.argmax(live, axis=1)]   # first live run
+    return found, cell
+
+
+def spill_find_runs(keys, vals, dead, run_start, n, queries,
+                    max_runs: int = MAX_SPILL_RUNS):
+    """Membership form of `spill_run_cells`: (found[Q] bool, vals[Q] u64)."""
+    found, cell = spill_run_cells(keys, dead, run_start, n, queries,
+                                  max_runs)
+    return found, jnp.where(found, vals[cell], jnp.uint64(0))
+
+
+def tier_find_ref(hot, cold, spill, queries):
+    """Raw per-tier probes with the reference implementations:
+    ((hot found, vals, col), (warm found, vals), (spill found, vals));
+    spill=None (2-tier stacks) yields all-miss spill results."""
+    from repro.core import det_skiplist as dsl
+    from repro.core import hashtable as ht
+    f_hot, v_hot, c_hot = ht.fixed_find_cols(hot, queries)
+    f_warm, v_warm, _ = dsl.find_batch(cold, queries)
+    if spill is None:
+        f_sp = jnp.zeros(queries.shape, bool)
+        v_sp = jnp.zeros(queries.shape, jnp.uint64)
+    else:
+        f_sp, v_sp = spill_find_runs(spill.keys, spill.vals, spill.dead,
+                                     spill.run_start, spill.n, queries)
+    return (f_hot, v_hot, c_hot), (f_warm, v_warm), (f_sp, v_sp)

@@ -178,6 +178,7 @@ class SplitOrderBackend(_Unordered):
 
 class TwoLevelSplitOrderBackend(_Unordered):
     name = "twolevel_splitorder"
+    kernelized = True      # probe dispatches to kernels/splitorder_probe
 
     def init(self, capacity: int, num_tables: int = 8, seed_slots: int = 2,
              max_load: int = 16, **kw):

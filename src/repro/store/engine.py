@@ -12,12 +12,16 @@ Selection is by config string (`get_backend`): swapping `det_skiplist` for
 `tiered3/lru`, ...) changes one argument, nothing else — the routing,
 sharding, and result plumbing are backend-agnostic, and each shard runs its
 own full tier stack (hot table, warm skiplist, spill runs, and policy
-state all shard on dim 0 like any other state leaf). Because the policies
-are deterministic and the linearization is order-independent for distinct
-keys, per-shard tier residency is EXACTLY what a single-device instance
-produces for that shard's sub-stream — asserted by
-`tests/multidev/store_prog.py`. `core/ordered_sharded.py` keeps its
-original API as thin wrappers over this module.
+state all shard on dim 0 like any other state leaf). The registered tier
+stacks probe through the FUSED `exec.tier_find` path, so each shard's
+local FIND chain is one kernel dispatch per plan regardless of tier depth
+(docs/tiers.md); an unfused `TieredBackend(fused=False)` instance drops in
+with bit-identical results and residency (the FUSED-OK multidev check).
+Because the policies are deterministic and the linearization is
+order-independent for distinct keys, per-shard tier residency is EXACTLY
+what a single-device instance produces for that shard's sub-stream —
+asserted by `tests/multidev/store_prog.py`. `core/ordered_sharded.py`
+keeps its original API as thin wrappers over this module.
 """
 from __future__ import annotations
 

@@ -18,18 +18,29 @@ comparisons, so parity is by construction, and mode choice is purely a
 performance knob.
 
 Kernelized probes: the deterministic skiplist search
-(`kernels.skiplist_search`) and the fixed-hash bucket probe
-(`kernels.hash_probe` — also the §IX hot-tier fast path). Probes whose
-access pattern defeats the static-shape premise (the randomized skiplist's
-MAX_GAP-padded walk, split-order's searchsorted over the full array, the
-two-level table's pooled L2 indirection) fall back to their jnp reference
-in every mode — still routed through this module so a future kernel is a
+(`kernels.skiplist_search`), the fixed-hash bucket probe
+(`kernels.hash_probe` — also the §IX hot-tier fast path), the FUSED
+tier-stack find (`kernels.tier_find` — hot probe + warm walk + per-run
+spill search in ONE pallas_call, dispatched by `tier_find`), and the
+two-level split-order per-table searchsorted (`kernels.splitorder_probe`).
+Probes whose access pattern defeats the static-shape or VMEM premise (the
+randomized skiplist's MAX_GAP-padded walk, ONE-level split-order's
+searchsorted over the full array — the global array does not fit VMEM,
+which is why only the two-level variant kernelizes — and the two-level
+hash table's pooled L2 indirection) fall back to their jnp reference in
+every mode — still routed through this module so a future kernel is a
 one-function change.
 
 The mode is read at TRACE time: `StoreEngine`/`make_store_step` bake it
 into the jitted step via `exec_mode(...)`, so two engines with different
 modes coexist; flipping the module default after a step is traced does not
 retrace it.
+
+Every probe entry here counts as ONE dispatch (`dispatch_count()` /
+`measure_dispatches()`): the counter ticks when the probe is TRACED, which
+is exactly once per probe launch in the compiled step — the unit the fused
+tier find exists to minimize. Benchmarks and the fused-path tests read it
+to report dispatches per plan.
 """
 from __future__ import annotations
 
@@ -113,11 +124,51 @@ def runnable_modes() -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# dispatch accounting
+# ---------------------------------------------------------------------------
+
+_n_dispatch = 0
+
+
+def _bump() -> None:
+    global _n_dispatch
+    _n_dispatch += 1
+
+
+def dispatch_count() -> int:
+    """Cumulative probe dispatches issued through this module (counted at
+    trace time — one tick = one probe launch in the traced step)."""
+    return _n_dispatch
+
+
+class _DispatchMeter:
+    def __init__(self, start: int):
+        self._start = start
+        self.n = 0
+
+
+@contextmanager
+def measure_dispatches():
+    """Count the probe dispatches traced inside the block:
+
+    >>> with measure_dispatches() as m:
+    ...     backend.apply(state, plan)        # or jax.make_jaxpr(...)
+    >>> m.n                                   # dispatches per plan
+    """
+    meter = _DispatchMeter(_n_dispatch)
+    try:
+        yield meter
+    finally:
+        meter.n = _n_dispatch - meter._start
+
+
+# ---------------------------------------------------------------------------
 # kernelized probes
 # ---------------------------------------------------------------------------
 
 def skiplist_find(s, queries, mode: str | None = None):
     """Deterministic-skiplist FIND: (found[Q], vals[Q], term_idx[Q])."""
+    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import det_skiplist as dsl
@@ -128,6 +179,7 @@ def skiplist_find(s, queries, mode: str | None = None):
 
 def hash_find(h, queries, mode: str | None = None):
     """Fixed-slot hash probe: (found[Q], vals[Q]). The §IX hot-tier path."""
+    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import hashtable as ht
@@ -145,6 +197,7 @@ def hash_find_cols(h, queries, mode: str | None = None):
     reference and the Pallas kernel derive the column with the same
     first-match argmax over the bucket row, so metadata stays bit-identical
     across modes (col of a miss is unspecified; callers mask by `found`)."""
+    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import hashtable as ht
@@ -160,6 +213,7 @@ def hash_find_cols(h, queries, mode: str | None = None):
 def rand_skiplist_find(s, queries, mode: str | None = None):
     """Randomized-skiplist FIND — jnp in every mode (the MAX_GAP-padded walk
     has no static-shape kernel win; see docs/store_layers.md)."""
+    _bump()
     _resolve(mode)
     from repro.core import rand_skiplist as rsl
     return rsl.find_batch(s, queries)
@@ -167,32 +221,77 @@ def rand_skiplist_find(s, queries, mode: str | None = None):
 
 def twolevel_hash_find(h, queries, mode: str | None = None):
     """Two-level hash FIND — jnp in every mode (pooled L2 indirection)."""
+    _bump()
     _resolve(mode)
     from repro.core import hashtable as ht
     return ht.twolevel_find(h, queries)
 
 
 def splitorder_find(h, queries, mode: str | None = None):
-    """Split-order FIND — jnp in every mode (global searchsorted probe)."""
+    """ONE-level split-order FIND — jnp in every mode: its searchsorted
+    runs over the single global [C] array, which does not fit VMEM at
+    production capacity (the two-level variant is the kernelized one)."""
+    _bump()
     _resolve(mode)
     from repro.core import splitorder as so
     return so.splitorder_find(h, queries)
 
 
 def twolevel_splitorder_find(h, queries, mode: str | None = None):
-    """Two-level split-order FIND — jnp in every mode."""
-    _resolve(mode)
-    from repro.core import splitorder as so
-    return so.twolevel_splitorder_find(h, queries)
+    """Two-level split-order FIND: per-table searchsorted over the
+    [T, C2] two-level layout (`kernels.splitorder_probe` under
+    interpret/pallas — each probe touches one small table row, so the
+    whole plane stack is VMEM-resident, unlike the one-level variant)."""
+    _bump()
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import splitorder as so
+        return so.twolevel_splitorder_find(h, queries)
+    from repro.kernels.splitorder_probe.ops import twolevel_splitorder_probe
+    return twolevel_splitorder_probe(h, queries, interpret=(m == "interpret"))
 
 
 def spill_find(sp, queries, mode: str | None = None):
     """Cold spill-tier membership probe: (found[Q], vals[Q]). jnp in every
-    mode for now — a masked flat compare over the append-only runs (the
-    cold tier is the batched/remote path, so probe latency is the least
-    critical of the three tiers). It still receives the full spill state —
-    run boundaries, tombstones, cursor — and routes through this module, so
-    a per-run sorted-probe kernel is a one-function change later."""
+    mode — since the fused tier find, a per-run binary search over the
+    `run_offsets` boundaries (`kernels.tier_find.ref.spill_find_runs`,
+    O(runs * log run-len); the old flat masked compare is gone from every
+    path). Standalone spill probes only run on the UNFUSED chain — the
+    fused path folds this search into the single `tier_find` dispatch —
+    so the cold tier keeps no dedicated kernel of its own."""
+    _bump()
     _resolve(mode)
     from repro.store.tiers import spill_find_ref
     return spill_find_ref(sp, queries)
+
+
+def tier_find(hot, cold, spill, queries, mode: str | None = None):
+    """FUSED tier-stack FIND — the whole hot -> warm -> cold chain as ONE
+    dispatch per plan (`kernels.tier_find`): VMEM bucket probe, level-major
+    skiplist walk, per-run searchsorted over the spill boundaries. Returns
+    ((hot found, vals, col), (warm found, vals), (spill found, vals)) with
+    miss FALL-THROUGH applied: a warm hit only counts on a hot miss, a
+    spill hit only on a hot+warm miss (under single-tier residency the
+    masking never changes a result — it encodes the fall-through contract).
+    `spill=None` (2-tier stacks) yields all-miss spill results. The hot
+    `col` feeds the LRU policy's stamp refresh, same as `hash_find_cols`.
+    Bit-identical to the unfused three-dispatch chain in every mode."""
+    _bump()
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.kernels.tier_find.ref import tier_find_ref
+        hot_r, warm_r, sp_r = tier_find_ref(hot, cold, spill, queries)
+    else:
+        from repro.kernels.tier_find.ops import tier_find_fused
+        hot_r, warm_r, sp_r = tier_find_fused(hot, cold, spill, queries,
+                                              interpret=(m == "interpret"))
+    import jax.numpy as jnp
+    f_hot, v_hot, c_hot = hot_r
+    f_warm, v_warm = warm_r
+    f_sp, v_sp = sp_r
+    f_warm = f_warm & ~f_hot
+    f_sp = f_sp & ~f_hot & ~f_warm
+    # a masked-off lane's value stays zero (the shared miss convention)
+    return ((f_hot, v_hot, c_hot),
+            (f_warm, jnp.where(f_warm, v_warm, jnp.uint64(0))),
+            (f_sp, jnp.where(f_sp, v_sp, jnp.uint64(0))))

@@ -16,11 +16,26 @@ Tier layout (every live key resides in EXACTLY ONE tier):
   warm   the deterministic skiplist (ordered, large — the `cold` field,
          named for continuity with the two-tier stack)
   cold   `SpillTier` (depth-3 only): append-only sorted runs outside the
-         hot/warm device-resident structures (`core.layout.spill_arrays`).
-         Cells below the cursor are immutable except for tombstones, so the
-         region can live in host/pinned memory and be DMA'd in bulk; runs
-         are merged on scan, and `spill_compact` rewrites them (dropping
-         tombstones) when dead entries pass 1/4 of the appended total.
+         hot/warm device-resident structures (`core.layout.spill_arrays`;
+         on TPU the planes are placed in pinned host memory — see
+         `_pin_spill_host`). Cells below the cursor are immutable except
+         for tombstones, so the region can live in host/pinned memory and
+         be DMA'd in bulk; runs are merged on scan, probed by a per-run
+         binary search over the `core.layout.run_offsets` boundary plane,
+         and `spill_compact` rewrites them (dropping tombstones) when dead
+         entries pass 1/4 of the appended total OR the live run count
+         nears `core.layout.MAX_SPILL_RUNS` (the static cap that keeps the
+         probe's boundary plane fixed-size).
+
+Probe execution (the `fused` knob, default True): the FIND phases issue
+ONE `store.exec.tier_find` dispatch per plan — the fused
+`kernels/tier_find` pallas_call probes hot buckets, walks the warm
+skiplist, and binary-searches the spill runs in a single launch, so the
+hot path's dispatch count is independent of tier depth (one for the
+insert-phase membership probe + one for the FIND phase = 2 per apply,
+down from 5). `fused=False` keeps the original three-dispatch chain —
+bit-identical results AND residency by contract (the parity suite
+`tests/test_tier_find.py` asserts it across exec modes and shardings).
 
 Eviction policies (the `policy` knob; state carried in `TierState.hot_meta`
 plus the `clock` batch counter — all deterministic, jit-able, and
@@ -92,11 +107,12 @@ import jax.numpy as jnp
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
 from repro.core.bits import EMPTY, KEY_INF, dup_in_run
-from repro.core.layout import (hash_slot, policy_arrays, spill_arrays,
-                               val_weight)
+from repro.core.layout import (MAX_SPILL_RUNS, hash_slot, policy_arrays,
+                               spill_arrays, val_weight)
+from repro.kernels.tier_find.ref import spill_find_runs, spill_run_cells
 from repro.store import exec as exec_
-from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, register,
-                             uniform_stats)
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan,
+                             get_backend, register, uniform_stats)
 from repro.store.backends import _pow2, finalize_results
 
 POLICIES = ("none", "lru", "size")
@@ -149,14 +165,13 @@ def spill_append(sp: SpillTier, keys, vals, mask):
 
 def spill_find_ref(sp: SpillTier, queries):
     """Membership probe over the live run entries: (found[Q], vals[Q]).
-    The jnp reference behind `store.exec.spill_find` — a masked flat
-    compare (the cold tier is the batched/remote path; per-run sorted
-    probes are a follow-up kernel)."""
-    live = ~sp.dead & (sp.keys != KEY_INF)
-    eq = (sp.keys[None, :] == queries[:, None]) & live[None, :]
-    found = jnp.any(eq, axis=1) & (queries != KEY_INF)
-    idx = jnp.argmax(eq, axis=1)
-    return found, jnp.where(found, sp.vals[idx], jnp.uint64(0))
+    The jnp reference behind `store.exec.spill_find` — a per-run binary
+    search over the `run_offsets` boundaries
+    (`kernels.tier_find.ref.spill_find_runs`), O(runs * log run-len)
+    instead of the old O(S) masked flat compare, so every exec mode AND
+    the fused tier-find kernel share one cold-tier algorithm."""
+    return spill_find_runs(sp.keys, sp.vals, sp.dead, sp.run_start, sp.n,
+                           queries)
 
 
 def spill_compact(sp: SpillTier) -> SpillTier:
@@ -179,15 +194,17 @@ def spill_compact(sp: SpillTier) -> SpillTier:
 
 
 def spill_discard(sp: SpillTier, keys, mask):
-    """Tombstone live matches (used by DELETE and by promotion). In-batch
-    duplicate lanes for one key dedupe by cell so `n_dead` stays exact.
+    """Tombstone live matches (used by DELETE and by promotion). The cell
+    lookup is the same per-run binary search as the membership probe
+    (`spill_run_cells` — the update path shares the find path's O(runs *
+    log run-len) algorithm, not the old flat compare). In-batch duplicate
+    lanes for one key dedupe by cell so `n_dead` stays exact.
     Returns (sp', hit[K])."""
     K = keys.shape[0]
     S = sp.keys.shape[0]
-    live = ~sp.dead & (sp.keys != KEY_INF)
-    eq = (sp.keys[None, :] == keys[:, None]) & live[None, :]
-    found = jnp.any(eq, axis=1) & mask & (keys != KEY_INF)
-    cell = jnp.where(found, jnp.argmax(eq, axis=1).astype(jnp.int32), S)
+    hit, at = spill_run_cells(sp.keys, sp.dead, sp.run_start, sp.n, keys)
+    found = hit & mask & (keys != KEY_INF)
+    cell = jnp.where(found, at.astype(jnp.int32), S)
     o = jnp.argsort(cell, stable=True)
     cs = cell[o]
     fdup = jnp.concatenate([jnp.zeros((1,), bool),
@@ -197,6 +214,40 @@ def spill_discard(sp: SpillTier, keys, mask):
     nd = sp.dead.at[jnp.where(eff, cell, S)].set(True, mode="drop")
     return sp._replace(dead=nd,
                        n_dead=sp.n_dead + jnp.sum(eff).astype(jnp.int32)), eff
+
+
+def spill_maintain(sp: SpillTier) -> SpillTier:
+    """Run-merging maintenance, applied at the end of every `apply`/`flush`
+    that carries a spill tier. Compacts when tombstones pass 1/4 of the
+    appended total (the churn rule) OR when the live run count could
+    exceed `core.layout.MAX_SPILL_RUNS` next batch (an apply appends at
+    most 3 runs: eviction demotes, insert overflow, promotion demotes).
+    The second trigger is what makes the run cap an INVARIANT — and the
+    cap is what gives the per-run probe (jnp and the fused kernel alike)
+    a static run-boundary plane to binary-search."""
+    churn = sp.n_dead * 4 > sp.n
+    runs = jnp.sum(sp.run_start.astype(jnp.int32))
+    return jax.lax.cond(churn | (runs + 3 > MAX_SPILL_RUNS), spill_compact,
+                        lambda s: s, sp)
+
+
+def _pin_spill_host(sp: SpillTier) -> SpillTier:
+    """Best-effort placement of the spill planes in pinned host memory —
+    the append-only layout was built for exactly this (cells below the
+    cursor move only in bulk). Only attempted on TPU backends that expose
+    a `pinned_host` memory space; anywhere else (CPU CI, older runtimes)
+    it is a guarded no-op. Engines that re-device_put the whole state with
+    their own sharding override the placement — this covers the direct
+    single-device path."""
+    try:
+        dev = jax.devices()[0]
+        if dev.platform != "tpu":
+            return sp
+        sharding = jax.sharding.SingleDeviceSharding(
+            dev, memory_kind="pinned_host")
+        return jax.tree.map(lambda x: jax.device_put(x, sharding), sp)
+    except Exception:
+        return sp
 
 
 class TierState(NamedTuple):
@@ -274,15 +325,16 @@ class TieredBackend:
     `hash+skiplist` (depth 2) and `tiered3[/lru|/size]` (depth 3)."""
 
     ordered = True
-    kernelized = True      # hot probe + warm find dispatch to kernels
+    kernelized = True      # fused tier find / per-tier probes -> kernels
 
     def __init__(self, promote: bool = True, depth: int = 2,
-                 policy: str = "none"):
+                 policy: str = "none", fused: bool = True):
         assert depth in (2, 3), "2 (hash->skiplist) or 3 (+ host spill)"
         assert policy in POLICIES, f"policy must be one of {POLICIES}"
         self.promote = promote
         self.depth = depth
         self.policy = policy
+        self.fused = fused     # one tier_find dispatch per probe phase
         base = "hash+skiplist" if depth == 2 else "tiered3"
         self.name = base if policy == "none" else f"{base}/{policy}"
 
@@ -298,7 +350,8 @@ class TieredBackend:
             n_evict=jnp.int64(0),
             n_promote=jnp.int64(0),
             cold=dsl.skiplist_init(capacity),
-            spill=(spill_init(capacity if spill_cap is None else spill_cap)
+            spill=(_pin_spill_host(
+                spill_init(capacity if spill_cap is None else spill_cap))
                    if self.depth == 3 else None))
 
     # -- tier movement helpers ----------------------------------------------
@@ -339,13 +392,20 @@ class TieredBackend:
         qk = jnp.where(valid, keys, KEY_INF)
 
         # INSERTS: insert-if-absent across ALL tiers; lanes absent
-        # everywhere try hot first (under the policy), the rest fall down
+        # everywhere try hot first (under the policy), the rest fall down.
+        # Fused: the lower-tier membership probe is ONE tier_find dispatch
+        # (hot results unused — the insert path learns hot residency from
+        # its own bucket prologue); unfused: one dispatch per lower tier.
         ins_k = jnp.where(ins_m, keys, KEY_INF)
-        in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
-        if spill is not None:
-            in_spill, _ = exec_.spill_find(spill, ins_k)
+        if self.fused:
+            _, (in_cold, _), (in_spill, _) = exec_.tier_find(
+                hot, cold, spill, ins_k)
         else:
-            in_spill = jnp.zeros((K,), bool)
+            in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
+            if spill is not None:
+                in_spill, _ = exec_.spill_find(spill, ins_k)
+            else:
+                in_spill = jnp.zeros((K,), bool)
         try_hot = ins_m & ~in_cold & ~in_spill
         if self.policy == "none":
             hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals, try_hot)
@@ -373,16 +433,22 @@ class TieredBackend:
             del_spill = jnp.zeros((K,), bool)
         deleted = del_hot | del_cold | del_spill
 
-        # FINDS observe the post-update state of every tier; the hot probe
-        # is the kernelized fast path and reports the hit column so the LRU
-        # policy can refresh its stamps (exec.hash_find_cols)
-        f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
-        f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
-        if spill is not None:
-            f_spill, v_spill = exec_.spill_find(spill, qk)
+        # FINDS observe the post-update state of every tier. Fused: the
+        # whole hot -> warm -> spill chain is ONE tier_find dispatch per
+        # plan (dispatch count independent of tier depth); unfused: one
+        # dispatch per tier. Either way the hot probe reports the hit
+        # column so the LRU policy can refresh its stamps.
+        if self.fused:
+            ((f_hot, v_hot, c_hot), (f_cold, v_cold),
+             (f_spill, v_spill)) = exec_.tier_find(hot, cold, spill, qk)
         else:
-            f_spill = jnp.zeros((K,), bool)
-            v_spill = jnp.zeros((K,), jnp.uint64)
+            f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
+            f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
+            if spill is not None:
+                f_spill, v_spill = exec_.spill_find(spill, qk)
+            else:
+                f_spill = jnp.zeros((K,), bool)
+                v_spill = jnp.zeros((K,), jnp.uint64)
         found = f_hot | f_cold | f_spill
         fvals = jnp.where(f_hot, v_hot, jnp.where(f_cold, v_cold, v_spill))
         if self.policy == "lru":
@@ -415,12 +481,12 @@ class TieredBackend:
                                          prom & prom_ok & f_spill)
 
         # spill-run maintenance: merge runs + drop tombstones at the same
-        # 25% threshold discipline as the skiplist compaction, so churn
-        # (promotions + deletes) cannot exhaust the append cursor while
-        # live occupancy stays low
+        # 25% threshold discipline as the skiplist compaction (so churn
+        # cannot exhaust the append cursor while live occupancy stays low)
+        # and keep the live run count under the static MAX_SPILL_RUNS cap
+        # the per-run probe's boundary plane is sized for
         if spill is not None:
-            spill = jax.lax.cond(spill.n_dead * 4 > spill.n, spill_compact,
-                                 lambda s: s, spill)
+            spill = spill_maintain(spill)
 
         state2 = TierState(hot=hot, hot_meta=meta, clock=clock + 1,
                            n_evict=n_evict, n_promote=n_promote,
@@ -484,6 +550,8 @@ class TieredBackend:
         hv = state.hot.vals.reshape(-1)
         cold, spill, ok = self._demote(state.cold, state.spill, hk, hv,
                                        hk != EMPTY)
+        if spill is not None:   # keep the run count under the static cap
+            spill = spill_maintain(spill)
         keep = (hk != EMPTY) & ~ok
         hot = state.hot._replace(
             keys=jnp.where(keep, hk, EMPTY).reshape(shape),
@@ -511,6 +579,17 @@ class TieredBackend:
             evictions=state.n_evict,
             promotions=state.n_promote,
             capacity=capacity)
+
+
+def unfused_twin(name: str) -> TieredBackend:
+    """A `fused=False` twin of a registered tier config — same depth,
+    policy, and promotion, probing through the original dispatch-per-tier
+    chain. The single source for what the parity suites and the
+    fused-vs-unfused bench rows compare the fused path against."""
+    be = get_backend(name)
+    assert isinstance(be, TieredBackend), f"{name!r} is not a tier stack"
+    return TieredBackend(promote=be.promote, depth=be.depth,
+                         policy=be.policy, fused=False)
 
 
 HASH_SKIPLIST = register(TieredBackend())

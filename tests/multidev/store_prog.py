@@ -221,6 +221,58 @@ def check_tier_residency(mesh, backend: str = "tiered3/lru") -> None:
           f"modes=jnp,interpret")
 
 
+def check_fused_vs_unfused(mesh, name: str = "tiered3/lru") -> None:
+    """Fused-path determinism under sharding: an engine over the registered
+    (fused — one `exec.tier_find` dispatch per probe phase) tier backend
+    and an engine over an unfused `TieredBackend(fused=False)` twin must
+    produce bit-identical results AND bit-identical per-shard residency
+    (the full tier-stack state) for the same global op stream, in both
+    exec modes. Fusing the FIND chain is a dispatch-count optimization;
+    the 8-device mesh must not be able to tell the difference."""
+    from repro.store.tiers import unfused_twin
+
+    total = N_SHARDS * LANES
+    rng = np.random.default_rng(99)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 24, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(ROUNDS):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], size=total,
+                         p=[0.5, 0.4, 0.1]).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)
+        rounds.append((ops, keys))
+
+    init_kw = dict(hot_bucket=4, hot_frac=8)
+    unfused = unfused_twin(name)
+    for mode in ("jnp", "interpret"):
+        states, results = [], []
+        for backend in (name, unfused):
+            eng = StoreEngine(mesh, AXES, LANES, backend=backend,
+                              pool_factor=8, exec_mode=mode)
+            state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+            put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+            outs = []
+            for ops, keys in rounds:
+                state, res, ok, dropped = eng.step(state, put(ops),
+                                                   put(keys), put(keys + 3))
+                assert int(dropped) == 0, mode
+                outs.append((np.asarray(ok), np.asarray(res)))
+            states.append(state)
+            results.append(outs)
+        for rnd, ((ok_f, v_f), (ok_u, v_u)) in enumerate(zip(*results)):
+            assert (ok_f == ok_u).all(), (mode, rnd)
+            assert (v_f == v_u).all(), (mode, rnd)
+        la, lb = jax.tree.leaves(states[0]), jax.tree.leaves(states[1])
+        assert len(la) == len(lb)
+        for i, (a, b) in enumerate(zip(la, lb)):
+            assert (np.asarray(a) == np.asarray(b)).all(), (mode, i)
+    print(f"FUSED-OK backend={name} shards={N_SHARDS} modes=jnp,interpret")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
@@ -229,6 +281,7 @@ def main() -> int:
         check_range(mesh, backend)
     check_uneven_occupancy(mesh)
     check_tier_residency(mesh)
+    check_fused_vs_unfused(mesh)
     return 0
 
 

@@ -19,7 +19,8 @@ from repro.store import exec as exec_
 
 ALL_BACKENDS = available_backends()
 MODES = exec_.runnable_modes()
-KERNELIZED = ("det_skiplist", "fixed_hash", "hash+skiplist", "tiered3/lru")
+KERNELIZED = ("det_skiplist", "fixed_hash", "hash+skiplist", "tiered3/lru",
+              "twolevel_splitorder")
 
 
 def _mixed_plans(seed=2, n_rounds=4, width=48, pool_size=64):

@@ -22,3 +22,4 @@ def test_sharded_store_multidevice():
     assert "RANGE-OK" in out.stdout
     assert "UNEVEN-OK" in out.stdout
     assert "RESIDENCY-OK" in out.stdout
+    assert "FUSED-OK" in out.stdout

@@ -1,0 +1,66 @@
+"""Diff two benchmark JSON artifacts (``BENCH_<table>.json``, written by
+``benchmarks.common.Recorder``): join rows by name and print per-row
+deltas, so fused-vs-unfused (or before-vs-after-a-PR) comparisons are one
+command instead of eyeballing two files.
+
+    python tools/bench_diff.py bench_a/BENCH_tiers.json \\
+                               bench_b/BENCH_tiers.json
+
+For every row name present in both files it prints the old and new
+``us_per_call`` and the relative delta (negative = B is faster); rows
+present in only one file are listed separately. The artifacts'
+measurement metadata (backend, exec modes, repeat count, warmup discard)
+is printed first — numbers from different protocols are flagged, not
+silently compared.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+META_KEYS = ("jax_backend", "device_count", "exec_modes", "bench_iters",
+             "warmup_discard")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "rows" not in payload:
+        raise SystemExit(f"{path}: not a Recorder artifact (no 'rows')")
+    return payload
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    a, b = load(argv[1]), load(argv[2])
+    meta_mismatch = [k for k in META_KEYS
+                     if a.get(k) != b.get(k) and (k in a or k in b)]
+    for payload, path in ((a, argv[1]), (b, argv[2])):
+        meta = {k: payload.get(k) for k in META_KEYS if k in payload}
+        print(f"{path}: table={payload['table']} {meta}")
+    if meta_mismatch:
+        print(f"WARNING: measurement metadata differs on {meta_mismatch} — "
+              f"deltas below compare different protocols/platforms")
+
+    rows_a = {r["name"]: r for r in a["rows"]}
+    rows_b = {r["name"]: r for r in b["rows"]}
+    shared = [n for n in rows_a if n in rows_b]
+    width = max((len(n) for n in shared), default=4)
+    print(f"\n{'row':<{width}}  {'A us/call':>10}  {'B us/call':>10}  "
+          f"{'delta':>8}")
+    for n in shared:
+        ua, ub = rows_a[n]["us_per_call"], rows_b[n]["us_per_call"]
+        delta = (ub - ua) / ua * 100 if ua else float("inf")
+        print(f"{n:<{width}}  {ua:>10.2f}  {ub:>10.2f}  {delta:>+7.1f}%")
+    for only, rows, path in ((set(rows_a) - set(rows_b), rows_a, argv[1]),
+                             (set(rows_b) - set(rows_a), rows_b, argv[2])):
+        for n in sorted(only):
+            print(f"only in {path}: {n} "
+                  f"({rows[n]['us_per_call']:.2f} us/call)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
