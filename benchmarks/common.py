@@ -29,8 +29,11 @@ DEFAULT_ITERS = 5
 DEFAULT_WARMUP = 2
 
 
-def bench(fn, *args, iters: int = DEFAULT_ITERS, warmup: int = DEFAULT_WARMUP):
-    """Median wall seconds per call of a jitted fn (blocks on outputs)."""
+def bench_times(fn, *args, iters: int = DEFAULT_ITERS,
+                warmup: int = DEFAULT_WARMUP) -> list[float]:
+    """Per-call wall seconds of a jitted fn (blocks on outputs), after the
+    warmup discard — the raw samples behind `bench`'s median, kept so
+    tables can surface tail latency (`percentiles`) next to it."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -40,7 +43,22 @@ def bench(fn, *args, iters: int = DEFAULT_ITERS, warmup: int = DEFAULT_WARMUP):
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return ts
+
+
+def bench(fn, *args, iters: int = DEFAULT_ITERS, warmup: int = DEFAULT_WARMUP):
+    """Median wall seconds per call of a jitted fn (blocks on outputs)."""
+    return float(np.median(bench_times(fn, *args, iters=iters,
+                                       warmup=warmup)))
+
+
+def percentiles(ts: list[float]) -> dict:
+    """Per-batch wall-time tail fields for a Recorder row: p50/p99 in µs
+    over one `bench_times` sample set. With the default 5-iteration repeat
+    p99 ~= max — still worth recording, since compaction/eviction batches
+    spike it while the median hides them."""
+    return {"p50_us": float(np.percentile(ts, 50) * 1e6),
+            "p99_us": float(np.percentile(ts, 99) * 1e6)}
 
 
 def emit(name: str, seconds_per_call: float, derived: str):

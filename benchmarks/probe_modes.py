@@ -15,14 +15,16 @@ every mode by contract, so these rows are a pure perf comparison.
 
 `run(out_dir=...)` writes machine-readable BENCH_probe_modes.json (rows +
 exec-mode/repeat/warmup metadata; diff two artifacts with
-tools/bench_diff.py).
+tools/bench_diff.py). Every row carries per-op wall-time tails
+(``p50_us``/``p99_us`` over the repeat samples) next to the median.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax
 
-from benchmarks.common import Recorder, bench, finish, keys64
+from benchmarks.common import (Recorder, bench_times, finish, keys64,
+                               percentiles)
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
 from repro.store import get_backend, make_plan
@@ -59,10 +61,12 @@ def run(out_dir: str | None = None):
     queries = jax.numpy.concatenate([base[: QUERIES // 2], queries])
     for mode in modes:
         fn = jax.jit(lambda st, q, m=mode: exec_.skiplist_find(st, q, m)[0])
-        t = bench(lambda: fn(s, queries))
+        ts = bench_times(lambda: fn(s, queries))
+        t = float(np.median(ts))
         rec.record(f"probe/skiplist_find/mode={mode}", t / QUERIES,
                    ops_per_sec=QUERIES / t, queries=QUERIES,
-                   preload=PRELOAD, mode=mode)
+                   preload=PRELOAD, mode=mode,
+                   **{k: v / QUERIES for k, v in percentiles(ts).items()})
 
     # fixed-slot hash: half the queries hit, half miss
     h = ht.fixed_init(HASH_SLOTS, BUCKET)
@@ -72,10 +76,12 @@ def run(out_dir: str | None = None):
                                 keys64(rng, QUERIES // 2)])
     for mode in modes:
         fn = jax.jit(lambda st, q, m=mode: exec_.hash_find(st, q, m)[0])
-        t = bench(lambda: fn(h, hq))
+        ts = bench_times(lambda: fn(h, hq))
+        t = float(np.median(ts))
         rec.record(f"probe/hash_find/mode={mode}", t / QUERIES,
                    ops_per_sec=QUERIES / t, queries=QUERIES,
-                   slots=HASH_SLOTS, bucket=BUCKET, mode=mode)
+                   slots=HASH_SLOTS, bucket=BUCKET, mode=mode,
+                   **{k: v / QUERIES for k, v in percentiles(ts).items()})
 
     # fused tier find vs the unfused three-dispatch chain, on a tiered3
     # state preloaded past the warm tier so all three tiers answer queries
@@ -97,19 +103,23 @@ def run(out_dir: str | None = None):
             # return every tier's outputs so XLA cannot dead-code a probe
             fused = jax.jit(lambda h_, c_, s_, q, m=mode:
                             exec_.tier_find(h_, c_, s_, q, m))
-            t_f = bench(lambda: fused(hot, cold, spill, tq))
+            ts_f = bench_times(lambda: fused(hot, cold, spill, tq))
+            t_f = float(np.median(ts_f))
         rec.record(f"probe/tier_find/fused/mode={mode}", t_f / QUERIES,
                    ops_per_sec=QUERIES / t_f, queries=QUERIES,
                    preload=TIER_PRELOAD, mode=mode, fused="yes",
-                   dispatches_per_plan=md.n)
+                   dispatches_per_plan=md.n,
+                   **{k: v / QUERIES for k, v in percentiles(ts_f).items()})
         with exec_.measure_dispatches() as md:
             unf = jax.jit(lambda h_, c_, s_, q, m=mode:
                           _unfused_chain(h_, c_, s_, q, m))
-            t_u = bench(lambda: unf(hot, cold, spill, tq))
+            ts_u = bench_times(lambda: unf(hot, cold, spill, tq))
+            t_u = float(np.median(ts_u))
         rec.record(f"probe/tier_find/unfused/mode={mode}", t_u / QUERIES,
                    ops_per_sec=QUERIES / t_u, queries=QUERIES,
                    preload=TIER_PRELOAD, mode=mode, fused="no",
-                   dispatches_per_plan=md.n)
+                   dispatches_per_plan=md.n,
+                   **{k: v / QUERIES for k, v in percentiles(ts_u).items()})
 
     finish(rec, out_dir)
     return rec

@@ -22,13 +22,20 @@ dispatch reduction AND its wall-time effect on one table. On CPU the
 `jnp`); `pallas` rows appear on TPU. Results are bit-identical across
 modes, backends, and probe paths by the store contract, so every
 comparison here is purely about performance and residency.
+
+Each row also carries per-op wall-time tails (``p50_us``/``p99_us`` over
+the repeat samples — compaction/eviction spikes show in the tail, not the
+median) and an ``observed`` flag: one extra ``obs:tiered3/lru`` row
+measures the ENABLED metrics-plane cost, while the un-wrapped rows stay
+the baseline for the <5% observability-off regression gate
+(`tools/bench_diff.py --assert-within`, wired in CI).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax
 
-from benchmarks.common import Recorder, bench, finish
+from benchmarks.common import Recorder, bench_times, finish, percentiles
 from repro.store import OP_DELETE, OP_FIND, OP_INSERT, get_backend, make_plan
 from repro.store import exec as exec_
 from repro.store.tiers import unfused_twin
@@ -72,6 +79,10 @@ def run(out_dir: str | None = None):
         variants.append((name, "", get_backend(name)))
         if name in TIERED:
             variants.append((name, "/unfused", unfused_twin(name)))
+    # one observed row: the ENABLED metrics-plane cost on the flagship
+    # policy stack (the un-wrapped rows above are the <5%-regression
+    # baseline — observability off costs nothing by construction)
+    variants.append(("tiered3/lru", "/obs", get_backend("obs:tiered3/lru")))
     for name, tag, be in variants:
         cap = BACKENDS[name]
         for mode in exec_.runnable_modes():
@@ -88,18 +99,22 @@ def run(out_dir: str | None = None):
                 # dispatches per plan, read off the single preload trace
                 dispatches = md.n
                 st, _ = step(st, churn)      # settle residency post-churn
-                t = bench(lambda: step(st, churn))
+                ts = bench_times(lambda: step(st, churn))
+                t = float(np.median(ts))
                 stats = {k: int(v) for k, v in be.stats(st).items()}
+            tails = {k: v / WIDTH for k, v in percentiles(ts).items()}
             rec.record(f"tiers/churn/backend={name}{tag}/mode={mode}",
                        t / WIDTH, ops_per_sec=WIDTH / t, width=WIDTH,
                        preload=PRELOAD, backend=name, mode=mode,
-                       fused=("no" if tag else
+                       fused=("no" if tag == "/unfused" else
                               "yes" if name in TIERED else "flat"),
+                       observed=("yes" if tag == "/obs" else "no"),
                        dispatches_per_plan=dispatches,
                        hot_size=stats["hot_size"],
                        cold_size=stats["cold_size"],
                        spill_size=stats["spill_size"],
                        evictions=stats["evictions"],
-                       promotions=stats["promotions"])
+                       promotions=stats["promotions"],
+                       **tails)
     finish(rec, out_dir)
     return rec

@@ -34,6 +34,11 @@ Conventions:
   are adjacent tiles). LRU-by-batch stores the last-touch batch clock;
   size-aware stores `val_weight` (payload byte count). The probe kernels
   read keys only; the policy planes are updated on the u64 host path.
+* **Metrics plane** — `metrics_plane` allocates the observability layer's
+  jit-carried int64 counters (one scalar per `repro.store.obs` metric name)
+  as a dict pytree that rides inside the store state: counters shard and
+  checkpoint exactly like the key planes they measure, and are held to the
+  same cross-exec-mode bit-identity contract as results.
 * **Spill runs** — `spill_arrays` allocates the cold host-spill tier: flat
   append-only key/value planes (`kv_arrays` conventions) plus tombstone and
   run-boundary marks. Each batch that spills appends one SORTED run;
@@ -87,6 +92,21 @@ def block_arrays(num_blocks: int, block_shape, key_fill=KEY_INF):
     if isinstance(block_shape, int):
         block_shape = (block_shape,)
     return kv_arrays((num_blocks,) + tuple(block_shape), key_fill)
+
+
+# ---------------------------------------------------------------------------
+# in-array metrics plane (the observability layer's jit-carried counters)
+# ---------------------------------------------------------------------------
+
+def metrics_plane(names) -> dict:
+    """The observability layer's counter allocation: one int64 zero scalar
+    per metric name, as a dict pytree that rides inside a store state (so
+    the counters are jit-carried, shard with the state on dim 0 like any
+    other leaf, and survive checkpointing for free). int64 matches the
+    stats counters; the schema itself (which names) is owned by
+    `repro.store.obs.METRICS_SCHEMA` — this module only owns the
+    allocation convention, like every other plane here."""
+    return {n: jnp.zeros((), jnp.int64) for n in names}
 
 
 # ---------------------------------------------------------------------------

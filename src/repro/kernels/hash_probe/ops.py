@@ -30,8 +30,11 @@ def fixed_hash_find_cols(h, keys, *, tile: int = 256, interpret: bool = True):
     slots = hash_slot(kp, h.num_slots)
     qh, ql = split_u64(kp)
     lay = bucket_layout(h.keys)
-    found, col = hash_probe_tiles(qh, ql, slots, lay.key_hi, lay.key_lo,
-                                  tile=tile, interpret=interpret)
+    # named scope: the kernel shows up as obs.kernel.hash_probe in
+    # jax.profiler timelines / lowered HLO (span taxonomy in store/obs.py)
+    with jax.named_scope("obs.kernel.hash_probe"):
+        found, col = hash_probe_tiles(qh, ql, slots, lay.key_hi, lay.key_lo,
+                                      tile=tile, interpret=interpret)
     found = found[:t].astype(bool) & (keys != EMPTY)
     col = col[:t]
     vals = jnp.where(found, h.vals[slots[:t], col], jnp.uint64(0))

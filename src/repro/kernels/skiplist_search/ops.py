@@ -33,10 +33,13 @@ def skiplist_find(s, queries, *, tile: int = 256, interpret: bool = True):
     qp = jnp.pad(queries, (0, pad), constant_values=KEY_INF)
     qh, ql = split_u64(qp)
     lay = skiplist_layout(s)
-    found, idx = skiplist_search_tiles(
-        qh, ql, lay.lvl_hi, lay.lvl_lo, lay.lvl_child,
-        lay.term_hi, lay.term_lo, lay.term_mark,
-        tile=tile, interpret=interpret)
+    # named scope: visible as obs.kernel.skiplist_search in jax.profiler
+    # timelines / lowered HLO (span taxonomy in store/obs.py)
+    with jax.named_scope("obs.kernel.skiplist_search"):
+        found, idx = skiplist_search_tiles(
+            qh, ql, lay.lvl_hi, lay.lvl_lo, lay.lvl_child,
+            lay.term_hi, lay.term_lo, lay.term_mark,
+            tile=tile, interpret=interpret)
     found = found[:t].astype(bool) & (queries != KEY_INF)
     idx = idx[:t]
     vals = jnp.where(found, s.term_vals[jnp.clip(idx, 0, s.capacity - 1)],

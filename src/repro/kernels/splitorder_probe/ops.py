@@ -10,6 +10,7 @@ planes and int32 table ids only.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF, bitrev64, hash64
@@ -39,9 +40,12 @@ def twolevel_splitorder_probe(h, keys, *, tile: int = 256,
     qkh, qkl = split_u64(kp)
     rh, rl = split_u64(h.rk)
     kh, kl = split_u64(h.keys)
-    found, at = splitorder_probe_tiles(qrh, qrl, qkh, qkl, tbl, rh, rl,
-                                       kh, kl, tile=tile,
-                                       interpret=interpret)
+    # named scope: visible as obs.kernel.splitorder_probe in jax.profiler
+    # timelines / lowered HLO (span taxonomy in store/obs.py)
+    with jax.named_scope("obs.kernel.splitorder_probe"):
+        found, at = splitorder_probe_tiles(qrh, qrl, qkh, qkl, tbl, rh, rl,
+                                           kh, kl, tile=tile,
+                                           interpret=interpret)
     found = found[:t].astype(bool) & (keys != KEY_INF)
     at = at[:t]
     vals = jnp.where(found, h.vals[tbl[:t], at], jnp.uint64(0))

@@ -10,6 +10,7 @@ with the jnp reference.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF
@@ -37,7 +38,10 @@ def tier_find_fused(hot, cold, spill, queries, *, tile: int = 256,
     if spill is not None:
         sp = spill_layout(spill.keys, spill.dead, spill.run_start, spill.n)
         args += (sp.key_hi, sp.key_lo, sp.dead, sp.run_off)
-    out = tier_find_tiles(*args, tile=tile, interpret=interpret)
+    # named scope: visible as obs.kernel.tier_find in jax.profiler
+    # timelines / lowered HLO (span taxonomy in store/obs.py)
+    with jax.named_scope("obs.kernel.tier_find"):
+        out = tier_find_tiles(*args, tile=tile, interpret=interpret)
 
     valid = queries != KEY_INF
     f_hot = out[0][:t].astype(bool) & valid

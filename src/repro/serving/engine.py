@@ -22,6 +22,7 @@ from repro.serving import kvcache as KV
 from repro.serving import prefix_cache as PC
 from repro.serving import scheduler as SCH
 from repro.serving.paged_decode import paged_decode_step
+from repro.store import obs
 
 
 @dataclasses.dataclass
@@ -55,7 +56,10 @@ class Engine:
                                                      use_kernel=use_kernel))
         self._prefill = {}
         self.steps = 0
-        self.prefix_hits = 0
+        self.prefix_hits = 0       # full pages served from the prefix cache
+        self.prefix_lookups = 0    # full pages probed against it
+        self.decode_tokens = 0     # tokens emitted by decode steps
+        self._batch_fill_sum = 0.0  # sum over steps of active/max_reqs
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -132,6 +136,7 @@ class Engine:
             n_hit = 0
             hit_ids = []
             if pkeys:
+                self.prefix_lookups += len(pkeys)
                 self.pc, pids, fresh = PC.lookup(
                     self.pc, self.kv.pool, jnp.asarray(pkeys, jnp.uint64))
                 for pid, f in zip(np.asarray(pids), np.asarray(fresh)):
@@ -166,9 +171,11 @@ class Engine:
                 suf = jnp.asarray(req.prompt[n_hit * page:], jnp.int32)[None]
                 # model expects past as [ng, B, S, Hkv, Dh]
                 pk = past_k.transpose(0, 1, 2, 3, 4)
-                logits, klay, vlay = self._prefill_past_fn(
-                    n_hit * page, plen - n_hit * page)(
-                    self.params, suf, past_k, past_v)
+                with obs.span("prefill", req_id=req.req_id, plen=plen,
+                              shared_pages=n_hit):
+                    logits, klay, vlay = self._prefill_past_fn(
+                        n_hit * page, plen - n_hit * page)(
+                        self.params, suf, past_k, past_v)
                 # caches cover past+suffix; write only the suffix pages
                 kl = klay[:, 0, n_hit * page:]
                 vl = vlay[:, 0, n_hit * page:]
@@ -177,7 +184,10 @@ class Engine:
                 self.prefix_hits += n_hit
             else:
                 toks = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, klay, vlay = self._prefill_fn(plen)(self.params, toks)
+                with obs.span("prefill", req_id=req.req_id, plen=plen,
+                              shared_pages=0):
+                    logits, klay, vlay = self._prefill_fn(plen)(self.params,
+                                                                toks)
                 # klay: [n_groups, B, S, Hkv, Dh] -> [L, S, Hkv, Dh]
                 kl = klay[:, 0]
                 vl = vlay[:, 0]
@@ -205,7 +215,8 @@ class Engine:
     def step(self):
         """One engine iteration: admit, decode one token for every active
         request, retire finished ones."""
-        self._admit()
+        with obs.span("admit"):
+            self._admit()
         active = self._active_slots()
         if not active:
             return 0
@@ -213,12 +224,17 @@ class Engine:
             active + [0] * (self.max_reqs - len(active)), jnp.int32)
         mask = jnp.asarray([True] * len(active)
                            + [False] * (self.max_reqs - len(active)))
-        self.kv, ok = KV.grow_for_decode(self.kv, slots, mask)
-        toks = [self.requests[self.slot_to_req[s]].out[-1] for s in active]
-        toks = jnp.asarray(toks + [0] * (self.max_reqs - len(active)),
-                           jnp.int32)[:, None]
-        logits, self.kv = self._decode(self.params, toks, slots, self.kv, mask)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with obs.span("decode", batch=len(active)):
+            self.kv, ok = KV.grow_for_decode(self.kv, slots, mask)
+            toks = [self.requests[self.slot_to_req[s]].out[-1]
+                    for s in active]
+            toks = jnp.asarray(toks + [0] * (self.max_reqs - len(active)),
+                               jnp.int32)[:, None]
+            logits, self.kv = self._decode(self.params, toks, slots, self.kv,
+                                           mask)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self._batch_fill_sum += len(active) / self.max_reqs
+        self.decode_tokens += len(active)
         done_slots = []
         for i, s in enumerate(active):
             req = self.requests[self.slot_to_req[s]]
@@ -240,3 +256,20 @@ class Engine:
                and self.steps < max_steps):
             self.step()
         return {r.req_id: r.out for r in self.requests.values()}
+
+    def metrics(self) -> dict:
+        """Host-side engine counters over the closed `obs.SERVING_SCHEMA`
+        (glossary in docs/observability.md): current ring-queue depth, the
+        prefix cache's page hit rate, mean scheduler batch fill, and the
+        decode totals. Same schema discipline as the store metrics plane —
+        unknown keys are a ValueError, so docs stay exhaustive."""
+        return obs.uniform_serving_metrics(
+            ring_depth=int(SCH.pending(self.sched)),
+            prefix_hits=self.prefix_hits,
+            prefix_lookups=self.prefix_lookups,
+            prefix_hit_rate=(self.prefix_hits / self.prefix_lookups
+                             if self.prefix_lookups else 0.0),
+            batch_fill=(self._batch_fill_sum / self.steps
+                        if self.steps else 0.0),
+            decode_steps=self.steps,
+            decode_tokens=self.decode_tokens)

@@ -24,6 +24,12 @@ tiers     the hierarchical tier stacks: `hash+skiplist` (hot fixed-hash
 engine    the mesh-sharded engine (hierarchical all_to_all routing + local
           apply) generalizing core/ordered_sharded.py to any backend;
           `StoreEngine` is the one-object convenience wrapper
+obs       the observability layer: `obs:`-prefixed backends carry a
+          deterministic jit-carried metrics plane (`METRICS_SCHEMA`,
+          bit-identical across exec modes and shardings, like results),
+          and `span`/`tracing` record host trace spans exportable as
+          Chrome-trace/Perfetto JSON (tools/trace_export.py,
+          docs/observability.md)
 
 The stack is three explicit layers: `core.layout` owns the flat-memory
 shapes, `store.exec` owns probe execution over them, and this package's
@@ -36,9 +42,15 @@ from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_RANGE,
                              STATS_SCHEMA, OpPlan, OpResults, Store,
                              available_backends, get_backend, make_plan,
                              register, uniform_stats)
+from repro.store.obs import (METRICS_SCHEMA, SERVING_SCHEMA, SPAN_TAXONOMY,
+                             ObservedStore, Tracer, current_tracer, span,
+                             tracing, uniform_serving_metrics)
 
 __all__ = [
     "OP_DELETE", "OP_FIND", "OP_INSERT", "OP_NONE", "OP_RANGE",
     "STATS_SCHEMA", "OpPlan", "OpResults", "Store", "available_backends",
     "get_backend", "make_plan", "register", "uniform_stats",
+    "METRICS_SCHEMA", "SERVING_SCHEMA", "SPAN_TAXONOMY", "ObservedStore",
+    "Tracer", "current_tracer", "span", "tracing",
+    "uniform_serving_metrics",
 ]

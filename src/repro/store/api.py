@@ -34,7 +34,10 @@ common contract first: this module defines it.
     tiered3/size         tiered3 with size-aware hot-tier eviction
 
   The first six live in `store/backends.py`, the tier stacks in
-  `store/tiers.py` (policy semantics in docs/tiers.md). Execution mode is
+  `store/tiers.py` (policy semantics in docs/tiers.md). Prefixing any
+  registry string with `obs:` (e.g. `obs:tiered3/lru`) wraps the backend
+  in the observability layer (`store/obs.py`): same results, plus a
+  deterministic jit-carried metrics plane and host trace spans. Execution mode is
   orthogonal: `store/exec.py` (`store_exec` config / `REPRO_STORE_EXEC`
   env var) picks jnp | interpret | pallas probes for ANY backend, with
   bit-identical results.
@@ -158,7 +161,16 @@ def _ensure_builtin() -> None:
 def get_backend(name: str) -> Store:
     """Look up a registered backend by its registry string (the module
     docstring lists the built-ins; `available_backends()` lists everything
-    currently registered, including third-party drop-ins)."""
+    currently registered, including third-party drop-ins).
+
+    The `obs:` prefix composes observability onto ANY registered backend:
+    `get_backend("obs:tiered3/lru")` returns the `tiered3/lru` backend
+    wrapped in `repro.store.obs.ObservedStore`, whose state carries the
+    jit-compatible metrics plane and whose apply/scan record trace spans.
+    """
+    if name.startswith("obs:"):
+        from repro.store.obs import ObservedStore
+        return ObservedStore(get_backend(name[len("obs:"):]))
     _ensure_builtin()
     try:
         return _REGISTRY[name]

@@ -29,6 +29,7 @@ from repro.core import splitorder as so
 from repro.core.bits import EMPTY, KEY_INF
 from repro.core.layout import pow2_floor as _pow2
 from repro.store import exec as exec_
+from repro.store import obs
 from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, OpResults,
                              register, uniform_stats)
 
@@ -129,8 +130,15 @@ class FixedHashBackend(_Unordered):
         return ht.fixed_init(_pow2(max(capacity // bucket, 1)), bucket)
 
     def apply(self, state, plan: OpPlan):
+        def find(h, queries):
+            # bucket_collisions: live non-matching entries in each probed
+            # row — computed from the probe INPUTS on the host path, so the
+            # count is bit-identical across exec modes by construction
+            obs.record("bucket_collisions",
+                       lambda: obs.bucket_collision_count(h, queries))
+            return exec_.hash_find(h, queries)
         return apply_linearized(state, plan, ht.fixed_insert, ht.fixed_delete,
-                                exec_.hash_find, EMPTY)
+                                find, EMPTY)
 
     def stats(self, state):
         return uniform_stats(size=state.count, capacity=state.keys.size)

@@ -26,6 +26,7 @@ keeps its original API as thin wrappers over this module.
 from __future__ import annotations
 
 import math
+from contextlib import nullcontext
 from typing import Sequence
 
 import jax
@@ -36,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.routing import (axis_size, mesh_shard_map, route_back,
                                 route_to_owners)
 from repro.store import exec as exec_
+from repro.store import obs
 from repro.store.api import OpPlan, Store, get_backend
 
 
@@ -80,14 +82,31 @@ def make_store_step(mesh: Mesh, axis_names: Sequence[str], lanes: int,
     axis_sizes = [mesh.shape[a] for a in axis_names]
     pool = lanes * pool_factor
 
+    # per-shard routing counters land in the engine's OWN frame (opened
+    # only around the route phase — the backend's apply opens its own
+    # nested frame, so the two never double count) and are folded into the
+    # observed state explicitly; with an un-observed backend the frame is
+    # never opened and the records are no-ops
+    observed = isinstance(be, obs.ObservedStore)
+
     def body(state, ops, keys, vals):
         sl = jax.tree.map(lambda x: x[0], state)   # this shard's instance
         valid = ops >= 0
-        rr = route_to_owners(keys, vals, ops, valid, axis_names, axis_sizes,
-                             pool)
+        with (obs.collect() if observed else nullcontext(None)) as frame:
+            with obs.span("route", backend=be.name):
+                rr = route_to_owners(keys, vals, ops, valid, axis_names,
+                                     axis_sizes, pool)
+            if observed:
+                # ops this shard RECEIVED for local execution (valid routed
+                # lanes in its pool) and the bytes they carried through the
+                # all_to_all queues — per shard, like every other counter
+                routed = jnp.sum(rr.valid & (rr.aux >= 0)).astype(jnp.int64)
+                obs.record("routed_ops", routed)
+                obs.record("routed_bytes", routed * obs.ROUTED_OP_BYTES)
         plan = OpPlan(ops=rr.aux, keys=rr.keys, vals=rr.vals, mask=rr.valid)
         with exec_.exec_mode(mode):   # baked in at trace time
             sl, res = be.apply(sl, plan)
+        sl = obs.absorb_frame(sl, frame)
         resv, okb = route_back(res.vals, res.ok, rr.origin,
                                rr.valid & (rr.aux >= 0), axis_names,
                                axis_sizes, lanes)
@@ -158,6 +177,24 @@ def sharded_stats(backend, state) -> dict:
             for k in per[0]}
 
 
+def sharded_metrics(backend, state) -> dict:
+    """Host-side per-shard metrics plane: dict of [S] numpy int64 arrays
+    over `obs.METRICS_SCHEMA`. Requires an `obs:`-wrapped backend (whose
+    sharded state carries the counters on dim 0 like every other leaf);
+    per-shard values are bit-identical to a single-device observed instance
+    replaying that shard's sub-stream — the METRICS-OK multidev contract."""
+    be = resolve(backend)
+    if not isinstance(be, obs.ObservedStore):
+        raise ValueError(f"backend {be.name!r} carries no metrics plane; "
+                         f"construct the engine with an 'obs:'-prefixed "
+                         f"backend string (e.g. 'obs:tiered3/lru')")
+    n_shards = jax.tree.leaves(state)[0].shape[0]
+    per = [be.metrics(jax.tree.map(lambda x: x[i], state))
+           for i in range(n_shards)]
+    return {k: np.asarray([np.asarray(jax.device_get(p[k])) for p in per])
+            for k in per[0]}
+
+
 class StoreEngine:
     """Convenience bundle: backend + mesh + jitted step, one object.
 
@@ -184,10 +221,18 @@ class StoreEngine:
         self.exec_mode = exec_mode
         self.n_shards = int(math.prod(mesh.shape[a] for a in self.axis_names))
         self.sharding = store_sharding(mesh, self.axis_names)
-        self.step = jax.jit(make_store_step(mesh, self.axis_names, lanes,
-                                            backend=self.backend,
-                                            pool_factor=pool_factor,
-                                            exec_mode=exec_mode))
+        self._jit_step = jax.jit(make_store_step(mesh, self.axis_names, lanes,
+                                                 backend=self.backend,
+                                                 pool_factor=pool_factor,
+                                                 exec_mode=exec_mode))
+
+    def step(self, state, ops, keys, vals):
+        """One batched-op step, wrapped in the `"step"` trace span (real
+        per-batch wall time when a `obs.tracing()` block is active — the
+        timeline row `tools/trace_export.py` exports)."""
+        with obs.span("step", backend=self.backend.name, lanes=self.lanes,
+                      shards=self.n_shards):
+            return self._jit_step(state, ops, keys, vals)
 
     def init(self, capacity_per_shard: int, **kw):
         return sharded_init(self.backend, self.n_shards, capacity_per_shard,
@@ -200,3 +245,8 @@ class StoreEngine:
 
     def stats(self, state) -> dict:
         return sharded_stats(self.backend, state)
+
+    def metrics(self, state) -> dict:
+        """Per-shard metrics plane (`sharded_metrics`); raises unless the
+        engine was built over an `obs:` backend."""
+        return sharded_metrics(self.backend, state)

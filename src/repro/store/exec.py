@@ -40,12 +40,16 @@ Every probe entry here counts as ONE dispatch (`dispatch_count()` /
 `measure_dispatches()`): the counter ticks when the probe is TRACED, which
 is exactly once per probe launch in the compiled step — the unit the fused
 tier find exists to minimize. Benchmarks and the fused-path tests read it
-to report dispatches per plan.
+to report dispatches per plan. Meters are CONTEXT-LOCAL and NESTABLE (see
+`measure_dispatches`); each probe dispatch also opens an `obs.span("find",
+probe=...)` so trace exports attribute lowering cost per probe.
 """
 from __future__ import annotations
 
+import functools
 import os
 from contextlib import contextmanager
+from contextvars import ContextVar
 
 MODES = ("jnp", "interpret", "pallas")
 
@@ -124,27 +128,57 @@ def runnable_modes() -> tuple:
 
 
 # ---------------------------------------------------------------------------
-# dispatch accounting
+# dispatch accounting (context-local, nestable)
 # ---------------------------------------------------------------------------
 
 _n_dispatch = 0
+
+# the active meter stack lives in a ContextVar, so meters are CONTEXT-LOCAL:
+# concurrent traces (threads, async tasks) each see only their own probes,
+# and nested `measure_dispatches()` blocks compose instead of sharing one
+# global start offset
+_METERS: ContextVar[tuple] = ContextVar("repro_exec_meters", default=())
 
 
 def _bump() -> None:
     global _n_dispatch
     _n_dispatch += 1
+    for meter in _METERS.get():
+        meter._n += 1
 
 
 def dispatch_count() -> int:
-    """Cumulative probe dispatches issued through this module (counted at
-    trace time — one tick = one probe launch in the traced step)."""
+    """Cumulative probe dispatches issued through this module in this
+    process (counted at trace time — one tick = one probe launch in the
+    traced step). Monotone; see `reset_dispatch_count` for the reset
+    semantics. For scoped counts prefer `measure_dispatches`."""
     return _n_dispatch
 
 
-class _DispatchMeter:
-    def __init__(self, start: int):
-        self._start = start
-        self.n = 0
+def reset_dispatch_count() -> None:
+    """Zero the process-cumulative `dispatch_count()`. Reset semantics:
+    only the global total is affected — active `measure_dispatches` meters
+    count INCREMENTS (not offsets against the global), so a reset inside a
+    measured block neither corrupts nor rewinds any meter."""
+    global _n_dispatch
+    _n_dispatch = 0
+
+
+class DispatchMeter:
+    """Live dispatch counter for one `measure_dispatches` block. `n` is
+    valid DURING the block (live count so far) and after it (final count);
+    every probe traced in the block ticks this meter AND any enclosing
+    ones, so nested blocks see their own totals and outer blocks include
+    inner activity."""
+
+    __slots__ = ("_n",)
+
+    def __init__(self):
+        self._n = 0
+
+    @property
+    def n(self) -> int:
+        return self._n
 
 
 @contextmanager
@@ -154,21 +188,41 @@ def measure_dispatches():
     >>> with measure_dispatches() as m:
     ...     backend.apply(state, plan)        # or jax.make_jaxpr(...)
     >>> m.n                                   # dispatches per plan
+
+    Context-local and nestable: an inner `with measure_dispatches()` block
+    keeps its own total while still contributing to the outer meter, and
+    meters in other threads/contexts never observe this block's probes.
     """
-    meter = _DispatchMeter(_n_dispatch)
+    meter = DispatchMeter()
+    token = _METERS.set(_METERS.get() + (meter,))
     try:
         yield meter
     finally:
-        meter.n = _n_dispatch - meter._start
+        _METERS.reset(token)
+
+
+def _probe(fn):
+    """Shared probe-entry decorator: one dispatch tick + one
+    `obs.span("find", probe=<name>)` per entry (the span records lowering
+    wall time when a tracer is installed and names the scope for
+    `jax.profiler` either way)."""
+    from repro.store import obs
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        _bump()
+        with obs.span("find", cat="dispatch", probe=fn.__name__):
+            return fn(*args, **kw)
+    return wrapped
 
 
 # ---------------------------------------------------------------------------
 # kernelized probes
 # ---------------------------------------------------------------------------
 
+@_probe
 def skiplist_find(s, queries, mode: str | None = None):
     """Deterministic-skiplist FIND: (found[Q], vals[Q], term_idx[Q])."""
-    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import det_skiplist as dsl
@@ -177,9 +231,9 @@ def skiplist_find(s, queries, mode: str | None = None):
     return sk_find(s, queries, interpret=(m == "interpret"))
 
 
+@_probe
 def hash_find(h, queries, mode: str | None = None):
     """Fixed-slot hash probe: (found[Q], vals[Q]). The §IX hot-tier path."""
-    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import hashtable as ht
@@ -188,6 +242,7 @@ def hash_find(h, queries, mode: str | None = None):
     return fixed_hash_find(h, queries, interpret=(m == "interpret"))
 
 
+@_probe
 def hash_find_cols(h, queries, mode: str | None = None):
     """Fixed-slot hash probe that also reports the hit column:
     (found[Q], vals[Q], col[Q] i32). This is the policy-aware form of the
@@ -197,7 +252,6 @@ def hash_find_cols(h, queries, mode: str | None = None):
     reference and the Pallas kernel derive the column with the same
     first-match argmax over the bucket row, so metadata stays bit-identical
     across modes (col of a miss is unspecified; callers mask by `found`)."""
-    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import hashtable as ht
@@ -210,39 +264,39 @@ def hash_find_cols(h, queries, mode: str | None = None):
 # reference-only probes (routed here so kernelizing one is a local change)
 # ---------------------------------------------------------------------------
 
+@_probe
 def rand_skiplist_find(s, queries, mode: str | None = None):
     """Randomized-skiplist FIND — jnp in every mode (the MAX_GAP-padded walk
     has no static-shape kernel win; see docs/store_layers.md)."""
-    _bump()
     _resolve(mode)
     from repro.core import rand_skiplist as rsl
     return rsl.find_batch(s, queries)
 
 
+@_probe
 def twolevel_hash_find(h, queries, mode: str | None = None):
     """Two-level hash FIND — jnp in every mode (pooled L2 indirection)."""
-    _bump()
     _resolve(mode)
     from repro.core import hashtable as ht
     return ht.twolevel_find(h, queries)
 
 
+@_probe
 def splitorder_find(h, queries, mode: str | None = None):
     """ONE-level split-order FIND — jnp in every mode: its searchsorted
     runs over the single global [C] array, which does not fit VMEM at
     production capacity (the two-level variant is the kernelized one)."""
-    _bump()
     _resolve(mode)
     from repro.core import splitorder as so
     return so.splitorder_find(h, queries)
 
 
+@_probe
 def twolevel_splitorder_find(h, queries, mode: str | None = None):
     """Two-level split-order FIND: per-table searchsorted over the
     [T, C2] two-level layout (`kernels.splitorder_probe` under
     interpret/pallas — each probe touches one small table row, so the
     whole plane stack is VMEM-resident, unlike the one-level variant)."""
-    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.core import splitorder as so
@@ -251,6 +305,7 @@ def twolevel_splitorder_find(h, queries, mode: str | None = None):
     return twolevel_splitorder_probe(h, queries, interpret=(m == "interpret"))
 
 
+@_probe
 def spill_find(sp, queries, mode: str | None = None):
     """Cold spill-tier membership probe: (found[Q], vals[Q]). jnp in every
     mode — since the fused tier find, a per-run binary search over the
@@ -259,12 +314,12 @@ def spill_find(sp, queries, mode: str | None = None):
     path). Standalone spill probes only run on the UNFUSED chain — the
     fused path folds this search into the single `tier_find` dispatch —
     so the cold tier keeps no dedicated kernel of its own."""
-    _bump()
     _resolve(mode)
     from repro.store.tiers import spill_find_ref
     return spill_find_ref(sp, queries)
 
 
+@_probe
 def tier_find(hot, cold, spill, queries, mode: str | None = None):
     """FUSED tier-stack FIND — the whole hot -> warm -> cold chain as ONE
     dispatch per plan (`kernels.tier_find`): VMEM bucket probe, level-major
@@ -276,7 +331,6 @@ def tier_find(hot, cold, spill, queries, mode: str | None = None):
     `spill=None` (2-tier stacks) yields all-miss spill results. The hot
     `col` feeds the LRU policy's stamp refresh, same as `hash_find_cols`.
     Bit-identical to the unfused three-dispatch chain in every mode."""
-    _bump()
     m = _resolve(mode)
     if m == "jnp":
         from repro.kernels.tier_find.ref import tier_find_ref

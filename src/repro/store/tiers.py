@@ -111,6 +111,7 @@ from repro.core.layout import (MAX_SPILL_RUNS, hash_slot, policy_arrays,
                                spill_arrays, val_weight)
 from repro.kernels.tier_find.ref import spill_find_runs, spill_run_cells
 from repro.store import exec as exec_
+from repro.store import obs
 from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan,
                              get_backend, register, uniform_stats)
 from repro.store.backends import _pow2, finalize_results
@@ -160,6 +161,7 @@ def spill_append(sp: SpillTier, keys, vals, mask):
     rs = sp.run_start.at[jnp.where(cnt > 0, sp.n, S)].set(True, mode="drop")
     inv = jnp.zeros((K,), jnp.int32).at[order].set(
         jnp.arange(K, dtype=jnp.int32))
+    obs.record("spill_appends", lambda: jnp.sum(ok))
     return sp._replace(keys=nk, vals=nv, run_start=rs, n=sp.n + cnt), ok[inv]
 
 
@@ -360,12 +362,33 @@ class TieredBackend:
         """Push lanes down: warm skiplist first; lanes the skiplist cannot
         take (capacity) append to the spill runs (depth 3) or drop (depth 2
         — the flat backend's allocation-failure analogue)."""
-        cold, ok_c, ex_c = dsl.insert_batch(cold, keys, vals, mask)
-        ok = ok_c | ex_c
-        if spill is not None:
-            spill, ok_s = spill_append(spill, keys, vals, mask & ~ok)
-            ok = ok | ok_s
+        with obs.span("demote", backend=self.name):
+            cold, ok_c, ex_c = dsl.insert_batch(cold, keys, vals, mask)
+            ok = ok_c | ex_c
+            if spill is not None:
+                spill, ok_s = spill_append(spill, keys, vals, mask & ~ok)
+                ok = ok | ok_s
+            obs.record("demotions", lambda: jnp.sum(ok & mask))
         return cold, spill, ok
+
+    def _record_probe_cost(self, cold, spill, queries):
+        """`warm_probe_steps` / `spill_runs_searched` for ONE lower-tier
+        probe phase, derived from the probe INPUTS (pre-probe tier state +
+        query mask). The deterministic skiplist walk descends every level
+        exactly once and the spill probe binary-searches every live run, so
+        the counts are exact per probed lane — and identical on the fused
+        and unfused paths by construction, since both consume the same
+        inputs."""
+        if not obs.collecting():
+            return
+        lanes = jnp.sum(queries != KEY_INF).astype(jnp.int64)
+        obs.record("warm_probe_steps", lanes * (cold.num_levels + 1))
+        if spill is not None:
+            runs = jnp.sum(
+                spill.run_start
+                & (jnp.arange(spill.run_start.shape[0]) < spill.n)
+            ).astype(jnp.int64)
+            obs.record("spill_runs_searched", lanes * runs)
 
     def _headroom(self, cold, spill):
         """Free lower-tier slots = the eviction budget: how many hot
@@ -396,89 +419,113 @@ class TieredBackend:
         # Fused: the lower-tier membership probe is ONE tier_find dispatch
         # (hot results unused — the insert path learns hot residency from
         # its own bucket prologue); unfused: one dispatch per lower tier.
-        ins_k = jnp.where(ins_m, keys, KEY_INF)
-        if self.fused:
-            _, (in_cold, _), (in_spill, _) = exec_.tier_find(
-                hot, cold, spill, ins_k)
-        else:
-            in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
-            if spill is not None:
-                in_spill, _ = exec_.spill_find(spill, ins_k)
+        with obs.span("insert", backend=self.name):
+            ins_k = jnp.where(ins_m, keys, KEY_INF)
+            self._record_probe_cost(cold, spill, ins_k)
+            if self.fused:
+                _, (in_cold, _), (in_spill, _) = exec_.tier_find(
+                    hot, cold, spill, ins_k)
             else:
-                in_spill = jnp.zeros((K,), bool)
-        try_hot = ins_m & ~in_cold & ~in_spill
-        if self.policy == "none":
-            hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals, try_hot)
-        else:
-            hot, meta, ins_hot, ex_hot, ev_k, ev_v, ev_m = _hot_insert_evict(
-                hot, meta, clock, keys, vals, try_hot, self.policy,
-                self._headroom(cold, spill))
-            n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
-            # victims demote first — the eviction cap guarantees they fit,
-            # so a displaced resident is never the lane that fails
-            cold, spill, _ = self._demote(cold, spill, ev_k, ev_v, ev_m)
-        down = try_hot & ~ins_hot & ~ex_hot
-        cold, spill, down_ok = self._demote(
-            cold, spill, jnp.where(down, keys, KEY_INF), vals, down)
-        inserted = ins_hot | down_ok
-        existed = ex_hot | in_cold | in_spill
+                in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
+                if spill is not None:
+                    in_spill, _ = exec_.spill_find(spill, ins_k)
+                else:
+                    in_spill = jnp.zeros((K,), bool)
+            try_hot = ins_m & ~in_cold & ~in_spill
+            if self.policy == "none":
+                hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals,
+                                                       try_hot)
+            else:
+                (hot, meta, ins_hot, ex_hot,
+                 ev_k, ev_v, ev_m) = _hot_insert_evict(
+                    hot, meta, clock, keys, vals, try_hot, self.policy,
+                    self._headroom(cold, spill))
+                n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
+                obs.record("evictions", lambda: jnp.sum(ev_m))
+                # victims demote first — the eviction cap guarantees they
+                # fit, so a displaced resident is never the lane that fails
+                cold, spill, _ = self._demote(cold, spill, ev_k, ev_v, ev_m)
+            down = try_hot & ~ins_hot & ~ex_hot
+            cold, spill, down_ok = self._demote(
+                cold, spill, jnp.where(down, keys, KEY_INF), vals, down)
+            inserted = ins_hot | down_ok
+            existed = ex_hot | in_cold | in_spill
 
         # DELETES: the single-tier invariant means exactly one tier can hit
-        hot, del_hot = ht.fixed_delete(hot, keys, del_m)
-        cold, del_cold = dsl.delete_batch(cold, keys, del_m & ~del_hot)
-        if spill is not None:
-            spill, del_spill = spill_discard(spill, keys,
-                                             del_m & ~del_hot & ~del_cold)
-        else:
-            del_spill = jnp.zeros((K,), bool)
-        deleted = del_hot | del_cold | del_spill
+        with obs.span("delete", backend=self.name):
+            hot, del_hot = ht.fixed_delete(hot, keys, del_m)
+            cold, del_cold = dsl.delete_batch(cold, keys, del_m & ~del_hot)
+            if spill is not None:
+                spill, del_spill = spill_discard(
+                    spill, keys, del_m & ~del_hot & ~del_cold)
+            else:
+                del_spill = jnp.zeros((K,), bool)
+            deleted = del_hot | del_cold | del_spill
 
         # FINDS observe the post-update state of every tier. Fused: the
         # whole hot -> warm -> spill chain is ONE tier_find dispatch per
         # plan (dispatch count independent of tier depth); unfused: one
         # dispatch per tier. Either way the hot probe reports the hit
         # column so the LRU policy can refresh its stamps.
-        if self.fused:
-            ((f_hot, v_hot, c_hot), (f_cold, v_cold),
-             (f_spill, v_spill)) = exec_.tier_find(hot, cold, spill, qk)
-        else:
-            f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
-            f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
-            if spill is not None:
-                f_spill, v_spill = exec_.spill_find(spill, qk)
+        with obs.span("find", backend=self.name):
+            self._record_probe_cost(cold, spill, qk)
+            if self.fused:
+                ((f_hot, v_hot, c_hot), (f_cold, v_cold),
+                 (f_spill, v_spill)) = exec_.tier_find(hot, cold, spill, qk)
             else:
-                f_spill = jnp.zeros((K,), bool)
-                v_spill = jnp.zeros((K,), jnp.uint64)
-        found = f_hot | f_cold | f_spill
-        fvals = jnp.where(f_hot, v_hot, jnp.where(f_cold, v_cold, v_spill))
-        if self.policy == "lru":
-            touch = valid & (ops == OP_FIND) & f_hot
-            tslots = hash_slot(qk, hot.num_slots)
-            cell = jnp.where(touch, tslots * hot.bucket + c_hot,
-                             hot.keys.size)
-            meta = meta.reshape(-1).at[cell].set(
-                jnp.broadcast_to(clock, (K,)).astype(jnp.int32),
-                mode="drop").reshape(meta.shape)
+                f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
+                f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
+                if spill is not None:
+                    f_spill, v_spill = exec_.spill_find(spill, qk)
+                else:
+                    f_spill = jnp.zeros((K,), bool)
+                    v_spill = jnp.zeros((K,), jnp.uint64)
+            # per-tier FIND attribution + hot probe collisions — all
+            # derived from post-branch probe outputs and the post-update
+            # hot table, so the fused and unfused paths record identical
+            # counters (single-tier residency makes f_* disjoint)
+            fnd_m = valid & (ops == OP_FIND)
+            obs.record("hot_hits", lambda: jnp.sum(fnd_m & f_hot))
+            obs.record("warm_hits", lambda: jnp.sum(fnd_m & f_cold))
+            obs.record("spill_hits", lambda: jnp.sum(fnd_m & f_spill))
+            obs.record("bucket_collisions",
+                       lambda: obs.bucket_collision_count(hot, qk))
+            found = f_hot | f_cold | f_spill
+            fvals = jnp.where(f_hot, v_hot,
+                              jnp.where(f_cold, v_cold, v_spill))
+            if self.policy == "lru":
+                touch = fnd_m & f_hot
+                tslots = hash_slot(qk, hot.num_slots)
+                cell = jnp.where(touch, tslots * hot.bucket + c_hot,
+                                 hot.keys.size)
+                meta = meta.reshape(-1).at[cell].set(
+                    jnp.broadcast_to(clock, (K,)).astype(jnp.int32),
+                    mode="drop").reshape(meta.shape)
 
         # PROMOTION (after the linearization point; membership-neutral):
         # warm/spill-served FIND lanes migrate up, displacing policy victims
         if self.promote:
-            prom = valid & (ops == OP_FIND) & found & ~f_hot
-            pv = jnp.where(f_cold, v_cold, v_spill)
-            if self.policy == "none":
-                hot, prom_ok, _ = ht.fixed_insert(hot, keys, pv, prom)
-            else:
-                (hot, meta, prom_ok, _,
-                 ev_k, ev_v, ev_m) = _hot_insert_evict(
-                    hot, meta, clock, keys, pv, prom, self.policy,
-                    self._headroom(cold, spill))
-                n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
-                cold, spill, _ = self._demote(cold, spill, ev_k, ev_v, ev_m)
-            n_promote = n_promote + jnp.sum(prom_ok).astype(jnp.int64)
-            cold, _ = dsl.delete_batch(cold, keys, prom & prom_ok & f_cold)
-            if spill is not None:
-                spill, _ = spill_discard(spill, keys,
-                                         prom & prom_ok & f_spill)
+            with obs.span("promote", backend=self.name):
+                prom = valid & (ops == OP_FIND) & found & ~f_hot
+                pv = jnp.where(f_cold, v_cold, v_spill)
+                if self.policy == "none":
+                    hot, prom_ok, _ = ht.fixed_insert(hot, keys, pv, prom)
+                else:
+                    (hot, meta, prom_ok, _,
+                     ev_k, ev_v, ev_m) = _hot_insert_evict(
+                        hot, meta, clock, keys, pv, prom, self.policy,
+                        self._headroom(cold, spill))
+                    n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
+                    obs.record("evictions", lambda: jnp.sum(ev_m))
+                    cold, spill, _ = self._demote(cold, spill,
+                                                  ev_k, ev_v, ev_m)
+                n_promote = n_promote + jnp.sum(prom_ok).astype(jnp.int64)
+                obs.record("promotions", lambda: jnp.sum(prom_ok))
+                cold, _ = dsl.delete_batch(cold, keys,
+                                           prom & prom_ok & f_cold)
+                if spill is not None:
+                    spill, _ = spill_discard(spill, keys,
+                                             prom & prom_ok & f_spill)
 
         # spill-run maintenance: merge runs + drop tombstones at the same
         # 25% threshold discipline as the skiplist compaction (so churn
@@ -486,7 +533,11 @@ class TieredBackend:
         # and keep the live run count under the static MAX_SPILL_RUNS cap
         # the per-run probe's boundary plane is sized for
         if spill is not None:
-            spill = spill_maintain(spill)
+            with obs.span("compact", backend=self.name):
+                pre_dead = spill.n_dead
+                spill = spill_maintain(spill)
+                obs.record("tombstones_reclaimed",
+                           lambda: pre_dead - spill.n_dead)
 
         state2 = TierState(hot=hot, hot_meta=meta, clock=clock + 1,
                            n_evict=n_evict, n_promote=n_promote,
@@ -545,19 +596,24 @@ class TieredBackend:
         cumulative eviction / promotion counters are PRESERVED — flushing
         the tier must not erase the policy's history (the
         hot-tier-exactly-full audit)."""
-        shape = state.hot.keys.shape
-        hk = state.hot.keys.reshape(-1)
-        hv = state.hot.vals.reshape(-1)
-        cold, spill, ok = self._demote(state.cold, state.spill, hk, hv,
-                                       hk != EMPTY)
-        if spill is not None:   # keep the run count under the static cap
-            spill = spill_maintain(spill)
-        keep = (hk != EMPTY) & ~ok
-        hot = state.hot._replace(
-            keys=jnp.where(keep, hk, EMPTY).reshape(shape),
-            vals=jnp.where(keep, hv, jnp.uint64(0)).reshape(shape),
-            count=jnp.sum(keep).astype(jnp.int64))
-        meta = jnp.where(keep.reshape(shape), state.hot_meta, 0)
+        with obs.span("flush", backend=self.name):
+            shape = state.hot.keys.shape
+            hk = state.hot.keys.reshape(-1)
+            hv = state.hot.vals.reshape(-1)
+            cold, spill, ok = self._demote(state.cold, state.spill, hk, hv,
+                                           hk != EMPTY)
+            if spill is not None:   # keep the run count under the static cap
+                with obs.span("compact", backend=self.name):
+                    pre_dead = spill.n_dead
+                    spill = spill_maintain(spill)
+                    obs.record("tombstones_reclaimed",
+                               lambda: pre_dead - spill.n_dead)
+            keep = (hk != EMPTY) & ~ok
+            hot = state.hot._replace(
+                keys=jnp.where(keep, hk, EMPTY).reshape(shape),
+                vals=jnp.where(keep, hv, jnp.uint64(0)).reshape(shape),
+                count=jnp.sum(keep).astype(jnp.int64))
+            meta = jnp.where(keep.reshape(shape), state.hot_meta, 0)
         return state._replace(hot=hot, hot_meta=meta, cold=cold, spill=spill)
 
     def stats(self, state: TierState):

@@ -273,6 +273,85 @@ def check_fused_vs_unfused(mesh, name: str = "tiered3/lru") -> None:
     print(f"FUSED-OK backend={name} shards={N_SHARDS} modes=jnp,interpret")
 
 
+def check_metrics(mesh, backend: str = "obs:tiered3/lru") -> None:
+    """METRICS-OK: the observability plane under sharding. Each shard of an
+    `obs:`-wrapped engine carries its own metrics counters (on dim 0, like
+    every state leaf); after the same global op stream, every shard's
+    counters must be bit-identical to a direct observed instance replaying
+    that shard's sub-stream — the same pure-partitioning contract as tier
+    residency — and the engine-only routing counters must equal the
+    explicitly computed expectation (`routed_ops` = valid lanes the shard
+    owns, `routed_bytes` = 24x). Run for both exec modes, so cross-mode AND
+    cross-sharding bit-identity is covered in one lane."""
+    from repro.store import get_backend, make_plan
+    from repro.store import exec as exec_
+    from repro.store import obs
+
+    total = N_SHARDS * LANES
+    rng = np.random.default_rng(123)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 24, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(ROUNDS):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], size=total,
+                         p=[0.5, 0.4, 0.1]).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)
+        rounds.append((ops, keys))
+
+    init_kw = dict(hot_bucket=4, hot_frac=8)
+    pool = 8 * LANES
+    ref = None
+    for mode in ("jnp", "interpret"):
+        eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=8,
+                          exec_mode=mode)
+        state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+        put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+        for ops, keys in rounds:
+            state, _, _, dropped = eng.step(state, put(ops), put(keys),
+                                            put(keys + 3))
+            assert int(dropped) == 0, mode
+        per_shard = eng.metrics(state)
+        assert set(per_shard) == set(obs.METRICS_SCHEMA)
+
+        be = get_backend(backend)
+        for s in range(N_SHARDS):
+            with exec_.exec_mode(mode):
+                direct = be.init(64, **init_kw)
+                expect_routed = 0
+                for ops, keys in rounds:
+                    owner = (keys >> np.uint64(61)).astype(np.int32)
+                    sel = (owner == s) & (ops >= 0)
+                    expect_routed += int(np.sum(sel))
+                    # the shard executes its sub-stream padded to the
+                    # engine's routing pool; pad lanes are masked
+                    n = int(np.sum(sel))
+                    p_ops = np.full(pool, -1, np.int32)
+                    p_keys = np.zeros(pool, np.uint64)
+                    p_ops[:n] = ops[sel]
+                    p_keys[:n] = keys[sel]
+                    direct, _ = be.apply(direct, make_plan(
+                        p_ops, p_keys, p_keys + 3,
+                        mask=np.arange(pool) < n))
+            m_dir = {k: int(v) for k, v in be.metrics(direct).items()}
+            for k in obs.METRICS_SCHEMA:
+                if k in ("routed_ops", "routed_bytes"):
+                    continue
+                assert int(per_shard[k][s]) == m_dir[k], (mode, s, k)
+            assert int(per_shard["routed_ops"][s]) == expect_routed, (mode, s)
+            assert (int(per_shard["routed_bytes"][s])
+                    == obs.ROUTED_OP_BYTES * expect_routed), (mode, s)
+        if ref is None:
+            ref = {k: v.tolist() for k, v in per_shard.items()}
+        else:       # cross-mode bit-identity of the whole sharded plane
+            assert ref == {k: v.tolist() for k, v in per_shard.items()}, mode
+    print(f"METRICS-OK backend={backend} shards={N_SHARDS} "
+          f"modes=jnp,interpret")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
@@ -282,6 +361,7 @@ def main() -> int:
     check_uneven_occupancy(mesh)
     check_tier_residency(mesh)
     check_fused_vs_unfused(mesh)
+    check_metrics(mesh)
     return 0
 
 

@@ -185,3 +185,16 @@ class TestEngineE2E:
             assert outs[i] == ref(pr, 5), f"request {i} diverged"
         # all pages recycled (no leaks across admissions/evictions)
         assert int(eng.kv.pool.num_free()) == 48
+        # host-side counters report through the closed SERVING_SCHEMA
+        from repro.store import obs
+        m = eng.metrics()
+        assert set(m) == set(obs.SERVING_SCHEMA)
+        assert m["ring_depth"] == 0          # everything drained
+        assert m["decode_steps"] == eng.steps > 0
+        # 4 requests x 5 tokens, one from prefill each -> 16 decode tokens
+        assert m["decode_tokens"] == sum(len(o) for o in outs.values()) - 4
+        assert 0.0 < m["batch_fill"] <= 1.0
+        assert m["prefix_lookups"] >= m["prefix_hits"] >= 0
+        assert (m["prefix_hit_rate"] == 0.0 if not m["prefix_lookups"]
+                else abs(m["prefix_hit_rate"]
+                         - m["prefix_hits"] / m["prefix_lookups"]) < 1e-12)

@@ -12,9 +12,20 @@ present in only one file are listed separately. The artifacts'
 measurement metadata (backend, exec modes, repeat count, warmup discard)
 is printed first — numbers from different protocols are flagged, not
 silently compared.
+
+Regression-gate mode (the CI smoke gate over the tier-churn rows):
+
+    python tools/bench_diff.py --assert-within 50 base.json new.json
+
+exits nonzero when ANY shared row's ``us_per_call`` regresses (B slower
+than A) by more than the threshold percentage. Improvements and missing
+rows never fail the gate — it bounds regressions, it does not require
+progress. The mode refuses to gate across mismatched measurement
+metadata (exit 2), since cross-protocol deltas are noise.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
@@ -31,18 +42,29 @@ def load(path: str) -> dict:
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 3:
-        print(__doc__, file=sys.stderr)
-        return 2
-    a, b = load(argv[1]), load(argv[2])
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_<table>.json artifacts (A -> B)")
+    ap.add_argument("a", help="baseline artifact (A)")
+    ap.add_argument("b", help="candidate artifact (B)")
+    ap.add_argument("--assert-within", type=float, default=None,
+                    metavar="PCT",
+                    help="exit 1 if any shared row's us_per_call regresses "
+                         "more than PCT%% vs the baseline")
+    args = ap.parse_args(argv[1:])
+
+    a, b = load(args.a), load(args.b)
     meta_mismatch = [k for k in META_KEYS
                      if a.get(k) != b.get(k) and (k in a or k in b)]
-    for payload, path in ((a, argv[1]), (b, argv[2])):
+    for payload, path in ((a, args.a), (b, args.b)):
         meta = {k: payload.get(k) for k in META_KEYS if k in payload}
         print(f"{path}: table={payload['table']} {meta}")
     if meta_mismatch:
         print(f"WARNING: measurement metadata differs on {meta_mismatch} — "
               f"deltas below compare different protocols/platforms")
+        if args.assert_within is not None:
+            print("refusing to gate across mismatched metadata",
+                  file=sys.stderr)
+            return 2
 
     rows_a = {r["name"]: r for r in a["rows"]}
     rows_b = {r["name"]: r for r in b["rows"]}
@@ -50,15 +72,28 @@ def main(argv: list[str]) -> int:
     width = max((len(n) for n in shared), default=4)
     print(f"\n{'row':<{width}}  {'A us/call':>10}  {'B us/call':>10}  "
           f"{'delta':>8}")
+    regressions = []
     for n in shared:
         ua, ub = rows_a[n]["us_per_call"], rows_b[n]["us_per_call"]
         delta = (ub - ua) / ua * 100 if ua else float("inf")
         print(f"{n:<{width}}  {ua:>10.2f}  {ub:>10.2f}  {delta:>+7.1f}%")
-    for only, rows, path in ((set(rows_a) - set(rows_b), rows_a, argv[1]),
-                             (set(rows_b) - set(rows_a), rows_b, argv[2])):
+        if args.assert_within is not None and delta > args.assert_within:
+            regressions.append((n, delta))
+    for only, rows, path in ((set(rows_a) - set(rows_b), rows_a, args.a),
+                             (set(rows_b) - set(rows_a), rows_b, args.b)):
         for n in sorted(only):
             print(f"only in {path}: {n} "
                   f"({rows[n]['us_per_call']:.2f} us/call)")
+
+    if args.assert_within is not None:
+        if regressions:
+            print(f"\nFAIL: {len(regressions)} row(s) regressed beyond "
+                  f"{args.assert_within:g}%:", file=sys.stderr)
+            for n, delta in regressions:
+                print(f"  {n}: {delta:+.1f}%", file=sys.stderr)
+            return 1
+        print(f"\nOK: no shared row regressed beyond "
+              f"{args.assert_within:g}% ({len(shared)} rows gated)")
     return 0
 
 

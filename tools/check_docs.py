@@ -5,7 +5,10 @@ Fails (exit 1) when:
   * a `repro.store` registry string has no mention in docs/*.md — so a new
     backend cannot ship without at least an index entry, or
   * a `benchmarks/*.py` Recorder table's ``BENCH_<table>.json`` name is
-    missing from docs/*.md — so artifact names and their docs stay in sync.
+    missing from docs/*.md — so artifact names and their docs stay in sync,
+  * an observability name — a `METRICS_SCHEMA` counter, a `SERVING_SCHEMA`
+    counter, or a `SPAN_TAXONOMY` span — has no mention, so the
+    docs/observability.md glossary stays exhaustive.
 
 Run from anywhere: ``python tools/check_docs.py`` (adds src/ to the path
 itself, like benchmarks/run.py).
@@ -45,6 +48,7 @@ def bench_artifacts() -> list[str]:
 def main() -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.store import available_backends
+    from repro.store import obs
 
     text = docs_text()
 
@@ -58,6 +62,12 @@ def main() -> int:
                for b in available_backends() if not mentioned(b)]
     missing += [f"benchmark artifact name {a!r}"
                 for a in bench_artifacts() if not mentioned(a)]
+    missing += [f"metrics counter {m!r}"
+                for m in obs.METRICS_SCHEMA if not mentioned(m)]
+    missing += [f"serving counter {m!r}"
+                for m in obs.SERVING_SCHEMA if not mentioned(m)]
+    missing += [f"trace span {s!r}"
+                for s in obs.SPAN_TAXONOMY if not mentioned(s)]
     if missing:
         print("docs/*.md is missing:", file=sys.stderr)
         for m in missing:
@@ -66,7 +76,9 @@ def main() -> int:
               "(see its registry + artifact tables)", file=sys.stderr)
         return 1
     print(f"docs-consistency OK: {len(available_backends())} backend "
-          f"strings, {len(bench_artifacts())} artifact names")
+          f"strings, {len(bench_artifacts())} artifact names, "
+          f"{len(obs.METRICS_SCHEMA) + len(obs.SERVING_SCHEMA)} counters, "
+          f"{len(obs.SPAN_TAXONOMY)} spans")
     return 0
 
 
