@@ -321,6 +321,77 @@ def range_query(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
 
 
 # ---------------------------------------------------------------------------
+# Priority-queue extraction (pop-min as rank-select over the live prefix)
+# ---------------------------------------------------------------------------
+
+def pop_rank_select(s: DetSkiplist, ranks: jnp.ndarray, mask: jnp.ndarray):
+    """Locate the rank-th smallest live key per lane (rank 0 = minimum).
+
+    Returns (found[K] bool, keys[K] uint64, idx[K] int32). Pure read — the
+    caller commits the extraction with `pop_mark`. Built on the same
+    live-prefix cumsum as `range_query` (live = unmarked, non-padding), so
+    every execution path that reproduces that formula agrees bit-for-bit.
+    Lanes whose rank exceeds the live population (or with mask False)
+    return found=False, keys=KEY_INF, idx=0.
+    """
+    live = (~s.term_mark) & (s.term_keys != KEY_INF)
+    prefix = jnp.cumsum(live.astype(jnp.int32))            # [C] inclusive
+    total = s.n_term - s.n_marked
+    want = ranks.astype(jnp.int32) + 1
+    found = mask & (want >= 1) & (want <= total)
+    idx = jnp.searchsorted(prefix, want, side="left").astype(jnp.int32)
+    idx = jnp.where(found, jnp.clip(idx, 0, s.capacity - 1), 0)
+    keys = jnp.where(found, s.term_keys[idx], KEY_INF)
+    return found, keys, idx
+
+
+def pop_mark(s: DetSkiplist, idx: jnp.ndarray, hit: jnp.ndarray,
+             compact_num: int = 1, compact_den: int = 4) -> DetSkiplist:
+    """Commit a batch of pops: tombstone the selected terminal slots (the
+    same lazy DropKey path as `delete_batch` — index levels stay stale) and
+    run the threshold compaction. `idx` rows with hit=False are ignored.
+    Lanes must target distinct slots (guaranteed by distinct ranks)."""
+    mark = s.term_mark.at[jnp.where(hit, idx, s.capacity)].set(True, mode="drop")
+    n_marked = s.n_marked + jnp.sum(hit).astype(jnp.int32)
+    s2 = s._replace(term_mark=mark, n_marked=n_marked)
+    return jax.lax.cond(n_marked * compact_den > s2.n_term * compact_num,
+                        compact, lambda t: t, s2)
+
+
+# ---------------------------------------------------------------------------
+# Range deletion (bulk DropKey over [lo, hi) intervals)
+# ---------------------------------------------------------------------------
+
+def range_delete_batch(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray,
+                       mask: jnp.ndarray | None = None, compact_num: int = 1,
+                       compact_den: int = 4):
+    """Tombstone every live key in [lo, hi) per lane, batched over K lanes.
+
+    Returns (s', counts[K] int32). When lanes overlap, each deleted entry
+    is attributed to the FIRST (lowest-index) covering lane — a fixed rule,
+    like first-lane-wins everywhere else — so sum(counts) is exactly the
+    number of entries removed. Same threshold compaction as `delete_batch`.
+    """
+    K = lo.shape[0]
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    live = (~s.term_mark) & (s.term_keys != KEY_INF)
+    cover = (mask[:, None]
+             & (s.term_keys[None, :] >= lo[:, None])
+             & (s.term_keys[None, :] < hi[:, None])
+             & live[None, :])                               # [K, C]
+    hitany = jnp.any(cover, axis=0)                         # [C]
+    first = jnp.argmax(cover, axis=0).astype(jnp.int32)     # [C] first lane
+    counts = jnp.zeros((K,), jnp.int32).at[
+        jnp.where(hitany, first, K)].add(1, mode="drop")
+    n_marked = s.n_marked + jnp.sum(hitany).astype(jnp.int32)
+    s2 = s._replace(term_mark=s.term_mark | hitany, n_marked=n_marked)
+    s2 = jax.lax.cond(n_marked * compact_den > s2.n_term * compact_num,
+                      compact, lambda t: t, s2)
+    return s2, counts
+
+
+# ---------------------------------------------------------------------------
 # invariant checker (tests + the paper's 1-2-3-4 criterion)
 # ---------------------------------------------------------------------------
 

@@ -13,6 +13,9 @@ skiplist_search   batched deterministic-skiplist FIND: the 1-2-3-4
 hash_probe        batched fixed-hash bucket probe over the bucket-major
                   layout (`core.layout.bucket_layout`) — the §IX hot-tier
                   fast path
+pq_pop            batched priority-queue pop: live-prefix rank-select over
+                  the terminal level + the shared skiplist_search
+                  `level_walk` descent (the `pq` backend's POPMIN/POPK)
 
 The store kernels (skiplist_search, hash_probe) are never called directly
 by backends: `repro.store.exec` dispatches between them and their jnp

@@ -1,0 +1,91 @@
+"""Batched priority-queue pop (rank-select + descent) — Pallas TPU kernel.
+
+Pop-min on the deterministic skiplist is rank selection over the live
+terminal prefix: the j-th pop lane of a plan extracts the j-th smallest
+live key. The kernel computes the live-prefix cumsum (the SAME
+live = unmarked & non-padding formula as `core.det_skiplist.range_query`),
+rank-selects each lane's key with a first-true argmax (the Mosaic-safe
+spelling of searchsorted-left over a monotone prefix), then feeds the
+selected keys through the shared `skiplist_search.level_walk` descent so
+the key -> terminal-index mapping has exactly one implementation across
+FIND and POP.
+
+Same layout contract as `kernels/skiplist_search`: level-major index stack
+([L, C1] u32 x3) + flat terminal planes ([C] u32 hi/lo + i8 marks), all
+VMEM-resident via whole-array BlockSpecs; ranks tile [T] per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.skiplist_search.kernel import level_walk
+
+# plain int (not a jnp scalar): pallas kernels cannot capture traced
+# constants, and the weakly-typed literal folds into the comparisons
+_INF32 = 0xFFFFFFFF
+
+
+def rank_select(ranks, mask, term_hi, term_lo, term_mark):
+    """The in-kernel rank-select body: live-prefix cumsum + first-true
+    argmax. Returns (found bool[T], key_hi u32[T], key_lo u32[T]) — lanes
+    whose rank exceeds the live population come back found=False with
+    KEY_INF keys, so the downstream level walk cannot match them against a
+    live entry."""
+    t = ranks.shape[0]
+    live = (term_mark == 0) & ~((term_hi == _INF32) & (term_lo == _INF32))
+    prefix = jnp.cumsum(live.astype(jnp.int32))            # [C] inclusive
+    total = prefix[-1]
+    want = ranks.astype(jnp.int32) + 1
+    found = (mask != 0) & (want >= 1) & (want <= total)
+    # first index with prefix >= want (== searchsorted-left on a monotone
+    # prefix); no true -> 0, which `found` already excludes
+    hit = prefix[None, :] >= want[:, None]                  # [T, C]
+    i = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    kh = jnp.where(found, jnp.take(term_hi, i, axis=0), _INF32)
+    kl = jnp.where(found, jnp.take(term_lo, i, axis=0), _INF32)
+    return found, kh, kl
+
+
+def _pq_kernel(rk_ref, mk_ref, lh_ref, ll_ref, lc_ref, th_ref, tl_ref,
+               tm_ref, found_ref, idx_ref, *, levels: int, fanout: int):
+    th, tl, tm = th_ref[...], tl_ref[...], tm_ref[...]
+    sel, kh, kl = rank_select(rk_ref[...], mk_ref[...], th, tl, tm)
+    walked, i = level_walk(kh, kl, lh_ref[...], ll_ref[...], lc_ref[...],
+                           th, tl, tm, levels=levels, fanout=fanout)
+    found_ref[...] = (sel & walked).astype(jnp.int8)
+    idx_ref[...] = jnp.where(sel & walked, i, 0)
+
+
+def pq_pop_tiles(ranks, mask, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo,
+                 term_mark, *, tile: int = 256, interpret: bool = True):
+    """ranks i32[T], mask i8[T]; lvl_*: [L, C1]; term_*: [C]. Returns
+    (found i8[T], term idx i32[T])."""
+    t = ranks.shape[0]
+    L, _ = lvl_hi.shape
+    if t == 0:   # empty batch: same contract as the jnp reference
+        return (jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.int32))
+    tile = min(tile, t)
+    assert t % tile == 0
+    grid = (t // tile,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
+
+    kernel = functools.partial(_pq_kernel, levels=L, fanout=4)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda g: (g,)),
+            pl.BlockSpec((tile,), lambda g: (g,)),
+            whole(lvl_hi), whole(lvl_lo), whole(lvl_child),
+            whole(term_hi), whole(term_lo), whole(term_mark),
+        ],
+        out_specs=[pl.BlockSpec((tile,), lambda g: (g,)),
+                   pl.BlockSpec((tile,), lambda g: (g,))],
+        out_shape=[jax.ShapeDtypeStruct((t,), jnp.int8),
+                   jax.ShapeDtypeStruct((t,), jnp.int32)],
+        interpret=interpret,
+    )(ranks, mask, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: priority-queue rank-select + descent over the stacked
+level layout the kernel consumes (keys as u32 hi/lo pairs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.skiplist_search.ref import skiplist_search_ref
+
+_INF32 = jnp.uint32(0xFFFFFFFF)
+
+
+def pq_pop_ref(ranks, mask, lvl_hi, lvl_lo, lvl_child, lvl_count,
+               term_hi, term_lo, term_mark):
+    """ranks i32[T], mask bool[T]; planes as in the kernel. Returns
+    (found bool[T], idx int32[T]) — the layout-level reference the
+    kernel is tested against."""
+    live = (~term_mark.astype(bool)) & ~((term_hi == _INF32)
+                                         & (term_lo == _INF32))
+    prefix = jnp.cumsum(live.astype(jnp.int32))
+    total = prefix[-1]
+    want = ranks.astype(jnp.int32) + 1
+    found = mask & (want >= 1) & (want <= total)
+    hit = prefix[None, :] >= want[:, None]
+    i = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    kh = jnp.where(found, term_hi[i], _INF32)
+    kl = jnp.where(found, term_lo[i], _INF32)
+    walked, idx = skiplist_search_ref(kh, kl, lvl_hi, lvl_lo, lvl_child,
+                                      lvl_count, term_hi, term_lo, term_mark)
+    found = found & walked
+    return found, jnp.where(found, idx, 0)

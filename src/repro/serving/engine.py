@@ -34,6 +34,8 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    submit_step: int = -1   # engine step of first submit (admit latency t0)
+    admit_step: int = -1    # engine step the request won a slot
 
 
 class Engine:
@@ -64,6 +66,8 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.requests[req.req_id] = req
+        if req.submit_step < 0:   # resubmits keep the original arrival step
+            req.submit_step = self.steps
         self.sched, ok = SCH.submit(
             self.sched, jnp.asarray([req.priority], jnp.uint32),
             jnp.asarray([req.req_id], jnp.int32), jnp.ones((1,), bool))
@@ -207,6 +211,7 @@ class Engine:
             nxt = int(jnp.argmax(logits[0]))
             req.out.append(nxt)
             req.slot = slot
+            req.admit_step = self.steps
             self.slot_to_req[slot] = req.req_id
 
     def _active_slots(self):

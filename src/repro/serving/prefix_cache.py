@@ -1,37 +1,49 @@
-"""Prefix cache: two-level split-order hash table (§VII's winner) mapping
-hash(token-block) -> KV page handle.
+"""Prefix cache on the Store API: a `tiered3/lru` store (§IX hot hash ->
+warm skiplist -> spill runs) mapping hash(token-block) -> KV page handle.
 
-Split-order growth fits a serving cache exactly: the table doubles its slot
-count as the cache fills with ZERO rehash movement, so admission latency
-never spikes. Values are (gen << 32 | page_id) pool handles; a hit is only
-usable if the generation still matches (ABA check) — a recycled page
-invalidates its cache entries for free, no eviction sweep needed (the lazy
-deletion idea, transplanted).
+The tier stack fits a serving cache exactly: the hottest page hashes live
+in the fixed-hash tier (one-probe lookups), the LRU-by-batch policy demotes
+cooling prefixes to the warm skiplist, and overflow spills to the cold
+runs instead of evicting — admission latency never spikes and the cache
+scales to millions of prefix pages. Lookups and publishes are OP_FIND /
+OP_INSERT plans through `make_store_step` on a 1-shard local mesh
+(`store.engine.local_store_engine`), so the cache shares the kvstore
+path's exec-mode parity and `obs` metrics plane (hot/warm/spill hits per
+tier); no direct hash-table calls remain here.
+
+Values are (gen << 32 | page_id) pool handles; a hit is only usable if the
+generation still matches (ABA check) — a recycled page invalidates its
+cache entries for free, no eviction sweep needed (the lazy deletion idea,
+transplanted).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.bits import hash64
 from repro.core.blockpool import BlockPool, handle_valid
-from repro.core.splitorder import (TwoLevelSplitOrder, twolevel_splitorder_find,
-                                   twolevel_splitorder_init,
-                                   twolevel_splitorder_insert)
+from repro.store import engine as engine_mod
+from repro.store import exec as exec_
+from repro.store.api import OP_FIND, OP_INSERT, OP_NONE
+
+BACKEND = "obs:tiered3/lru"
 
 
 class PrefixCache(NamedTuple):
-    table: TwoLevelSplitOrder
+    store: Any               # sharded `obs:tiered3/lru` state (1-shard)
     hits: jnp.ndarray
     misses: jnp.ndarray
 
 
-def prefix_cache_init(num_tables: int = 16, capacity: int = 1024,
-                      seed_slots: int = 8) -> PrefixCache:
+def _engine(lanes: int) -> engine_mod.StoreEngine:
+    return engine_mod.local_store_engine(BACKEND, lanes, exec_.get_mode())
+
+
+def prefix_cache_init(capacity: int = 1024, **kw) -> PrefixCache:
     return PrefixCache(
-        table=twolevel_splitorder_init(num_tables, capacity, seed_slots),
+        store=engine_mod.sharded_init(BACKEND, 1, capacity, **kw),
         hits=jnp.int64(0), misses=jnp.int64(0))
 
 
@@ -45,17 +57,33 @@ def block_key(tokens_block: jnp.ndarray, prev_key: jnp.ndarray) -> jnp.ndarray:
 
 
 def lookup(pc: PrefixCache, pool: BlockPool, keys: jnp.ndarray):
-    """Returns (pc', page_ids [-1 miss], hit_mask). Stale (recycled-page)
-    entries are misses via the generation check."""
-    found, handles = twolevel_splitorder_find(pc.table, keys)
+    """Returns (pc', page_ids [-1 miss], hit_mask). One OP_FIND plan; stale
+    (recycled-page) entries are misses via the generation check."""
+    k = keys.shape[0]
+    ops = jnp.full((k,), OP_FIND, jnp.int32)
+    store, handles, found, _ = _engine(k).step(pc.store, ops, keys,
+                                               jnp.zeros((k,), jnp.uint64))
     fresh = found & handle_valid(pool, handles)
-    ids = jnp.where(fresh, (handles & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32), -1)
-    return pc._replace(hits=pc.hits + jnp.sum(fresh, dtype=jnp.int64),
-                       misses=pc.misses + jnp.sum(found.shape[0] - jnp.sum(fresh),
+    ids = jnp.where(fresh, (handles & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32),
+                    -1)
+    return pc._replace(store=store,
+                       hits=pc.hits + jnp.sum(fresh, dtype=jnp.int64),
+                       misses=pc.misses + jnp.sum(k - jnp.sum(fresh),
                                                   dtype=jnp.int64)), ids, fresh
 
 
 def insert(pc: PrefixCache, keys: jnp.ndarray, handles: jnp.ndarray,
            mask: jnp.ndarray):
-    table, _, _ = twolevel_splitorder_insert(pc.table, keys, handles, mask)
-    return pc._replace(table=table)
+    """Publish page handles under their prefix hashes (one OP_INSERT plan;
+    insert-if-absent, like the split-order table it replaced)."""
+    ops = jnp.where(mask, OP_INSERT, OP_NONE).astype(jnp.int32)
+    store, _, _, _ = _engine(keys.shape[0]).step(pc.store, ops, keys, handles)
+    return pc._replace(store=store)
+
+
+def metrics(pc: PrefixCache) -> dict:
+    """The cache store's metrics plane (shard 0 of the `obs:tiered3/lru`
+    counters — find_hits/find_misses, hot/warm/spill hits, evictions,
+    ... over `obs.METRICS_SCHEMA`)."""
+    per = engine_mod.sharded_metrics(BACKEND, pc.store)
+    return {k: v[0] for k, v in per.items()}

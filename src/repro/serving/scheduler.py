@@ -1,71 +1,90 @@
-"""Request scheduler: a deterministic-skiplist priority index + the §III
-ring queue as the arrival buffer.
+"""Request scheduler on the Store API: an `obs:pq` priority-queue store +
+the §III ring queue as the arrival buffer.
 
 Pending requests enter the LCRQ-style ring (arrival order = FIFO ticket);
-the scheduler maintains a deterministic 1-2-3-4 skiplist keyed by
-(priority << 32 | ticket) — guaranteed O(log n) admit/pop-min, and the
-terminal level's contiguity gives "pop k smallest" as one range read (the
-paper's range-search argument vs BSTs, §II). All state is a pytree: the
-whole scheduler jit-compiles and checkpoints with the engine.
+the priority index is the `pq` Store backend — a deterministic 1-2-3-4
+skiplist keyed by (priority << 32 | ticket) with POPMIN extraction — driven
+through `make_store_step` on a 1-shard local mesh
+(`store.engine.local_store_engine`), so submission is an OP_INSERT plan,
+admission is a bulk-pop-k plan of OP_POPMIN lanes, and the whole scheduler
+hot path is the SAME jit-traced, shardable store step the kvstore workload
+uses (exec-mode parity and the pops/pop_empty metrics plane come for
+free). No direct skiplist calls remain here — the Store contract is the
+only dependency.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import det_skiplist as dsl
-from repro.core.bits import KEY_INF, make_priority_key
+from repro.core.bits import make_priority_key
 from repro.core.ringqueue import RingQueue, pop_batch, push_batch, queue_init
+from repro.store import engine as engine_mod
+from repro.store import exec as exec_
+from repro.store.api import OP_INSERT, OP_NONE, OP_POPMIN
+
+BACKEND = "obs:pq"
 
 
 class Scheduler(NamedTuple):
     arrivals: RingQueue          # §III queue of packed (priority, req_id)
-    index: dsl.DetSkiplist       # §II ordered index
+    store: Any                   # sharded `obs:pq` store state (1-shard)
     next_ticket: jnp.ndarray     # uint32 monotone
+
+
+def _engine(lanes: int) -> engine_mod.StoreEngine:
+    # mode resolved at call time and baked into the cached engine's traced
+    # step, so `with exec.exec_mode("interpret"):` replays the scheduler
+    # through the interpreter without retracing the default-mode engine
+    return engine_mod.local_store_engine(BACKEND, lanes, exec_.get_mode())
 
 
 def scheduler_init(max_pending: int, queue_blocks: int = 16,
                    block_size: int = 64) -> Scheduler:
     return Scheduler(
         arrivals=queue_init(queue_blocks, block_size, jnp.uint64),
-        index=dsl.skiplist_init(max_pending),
+        store=engine_mod.sharded_init(BACKEND, 1, max_pending),
         next_ticket=jnp.uint32(0),
     )
 
 
 def submit(s: Scheduler, priorities: jnp.ndarray, req_ids: jnp.ndarray,
            mask: jnp.ndarray):
-    """Enqueue arrivals (producer side — any shard can push)."""
-    k = priorities.shape[0]
+    """Enqueue arrivals (producer side — any shard can push): one ring push
+    + one OP_INSERT plan against the pq store (key = priority/ticket word,
+    value = req_id). Returns (s', ok)."""
     tickets = s.next_ticket + jnp.cumsum(mask.astype(jnp.uint32)) - 1
     keys = make_priority_key(priorities.astype(jnp.uint32), tickets)
-    packed = (keys << jnp.uint64(0)) | 0  # key doubles as payload
-    vals = req_ids.astype(jnp.uint64)
-    # pack (key, req_id) into the queue as two pushes? -> single u64:
-    # priority key goes in the queue; req_id rides in the skiplist value.
     q, ok = push_batch(s.arrivals, keys, mask)
-    # stash req ids keyed by ticket in the index immediately (queue carries
-    # ordering; index carries the sorted view)
-    idx, ins, _ = dsl.insert_batch(s.index, keys, vals, mask & ok)
+    ops = jnp.where(mask & ok, OP_INSERT, OP_NONE).astype(jnp.int32)
+    store, _, ins, _ = _engine(keys.shape[0]).step(
+        s.store, ops, keys, req_ids.astype(jnp.uint64))
     nt = s.next_ticket + jnp.sum(mask, dtype=jnp.uint32)
-    return Scheduler(arrivals=q, index=idx, next_ticket=nt), ok & ins
+    return Scheduler(arrivals=q, store=store, next_ticket=nt), ins
 
 
 def pop_min(s: Scheduler, k: int):
-    """Admit the k highest-priority (lowest-key) requests: one terminal-level
-    range read + batched delete. Returns (s', req_ids[k], valid[k])."""
-    lo = jnp.zeros((1,), jnp.uint64)
-    hi = jnp.full((1,), KEY_INF)
-    _, keys, vals, valid = dsl.range_query(s.index, lo, hi, k)
-    keys, vals, valid = keys[0], vals[0], valid[0]
-    idx, _ = dsl.delete_batch(s.index, jnp.where(valid, keys, KEY_INF), valid)
+    """Admit the k highest-priority (lowest-key) requests: ONE bulk-pop-k
+    plan of k OP_POPMIN lanes (the j-th lane extracts the j-th smallest
+    pending key; result vals = the popped req_id). Returns
+    (s', req_ids[k], valid[k])."""
+    ops = jnp.full((k,), OP_POPMIN, jnp.int32)
+    zeros = jnp.zeros((k,), jnp.uint64)    # keys = shard hint; 1 shard here
+    store, vals, popped, _ = _engine(k).step(s.store, ops, zeros, zeros)
     # drain matching arrivals (keeps queue and index in sync)
-    q, _, _ = pop_batch(s.arrivals, k, valid)
-    return Scheduler(arrivals=q, index=idx, next_ticket=s.next_ticket), \
-        vals.astype(jnp.int32), valid
+    q, _, _ = pop_batch(s.arrivals, k, popped)
+    return Scheduler(arrivals=q, store=store, next_ticket=s.next_ticket), \
+        vals.astype(jnp.int32), popped
 
 
 def pending(s: Scheduler) -> jnp.ndarray:
-    return s.index.size()
+    return jnp.asarray(engine_mod.sharded_stats(BACKEND, s.store)["size"][0])
+
+
+def metrics(s: Scheduler) -> dict:
+    """The scheduler store's metrics plane (shard 0 of the `obs:pq`
+    counters — pops, pop_empty, inserts_new, ... over
+    `obs.METRICS_SCHEMA`)."""
+    per = engine_mod.sharded_metrics(BACKEND, s.store)
+    return {k: v[0] for k, v in per.items()}

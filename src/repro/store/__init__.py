@@ -15,6 +15,10 @@ exec      the execution layer: FIND/probe phases dispatch through here to
           the pure-jnp references or the Pallas kernels
           (kernels/skiplist_search, kernels/hash_probe) — three modes
           (jnp | interpret | pallas), bit-identical results
+pq        the priority-queue backend (`pq`): the deterministic skiplist as
+          a mergeable heap — OP_POPMIN/OP_POPK bulk extraction (one rank
+          pool per plan, kernelized rank-select + level walk), plus
+          OP_RANGE_DELETE; the admission path of `repro.serving.scheduler`
 tiers     the hierarchical tier stacks: `hash+skiplist` (hot fixed-hash
           over the ordered skiplist) and `tiered3[/lru|/size]` (a third
           append-only host-spill tier of sorted runs, plus pluggable
@@ -38,7 +42,8 @@ backend by config string (`configs/*.py: store_backend`) and an execution
 mode by `store_exec`; adding a backend is a one-file drop-in that calls
 `register`.
 """
-from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_RANGE,
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_POPK,
+                             OP_POPMIN, OP_RANGE, OP_RANGE_DELETE,
                              STATS_SCHEMA, OpPlan, OpResults, Store,
                              available_backends, get_backend, make_plan,
                              register, uniform_stats)
@@ -47,7 +52,8 @@ from repro.store.obs import (METRICS_SCHEMA, SERVING_SCHEMA, SPAN_TAXONOMY,
                              tracing, uniform_serving_metrics)
 
 __all__ = [
-    "OP_DELETE", "OP_FIND", "OP_INSERT", "OP_NONE", "OP_RANGE",
+    "OP_DELETE", "OP_FIND", "OP_INSERT", "OP_NONE", "OP_POPK", "OP_POPMIN",
+    "OP_RANGE", "OP_RANGE_DELETE",
     "STATS_SCHEMA", "OpPlan", "OpResults", "Store", "available_backends",
     "get_backend", "make_plan", "register", "uniform_stats",
     "METRICS_SCHEMA", "SERVING_SCHEMA", "SPAN_TAXONOMY", "ObservedStore",

@@ -7,11 +7,22 @@ common contract first: this module defines it.
 
 * `OpPlan` — a batch of K operations as parallel arrays (ops/keys/vals/mask).
   A lane is one "thread"; the whole plan is one linearization unit with the
-  deterministic order INSERTS -> DELETES -> FINDS, first-lane-wins on
-  in-batch duplicates (strictly stronger than the paper's "some
-  linearization exists").
+  deterministic order INSERTS -> DELETES -> RANGE_DELETES -> POPS -> FINDS,
+  first-lane-wins on in-batch duplicates (strictly stronger than the
+  paper's "some linearization exists").
 * `OpResults` — per-lane (ok, vals): FIND -> (hit, stored value);
   INSERT -> (applied, already-existed flag); DELETE -> (removed, 0).
+  Priority-queue lanes (ordered backends that support them — `pq`):
+  POPMIN -> (popped, popped entry's VALUE) and POPK -> (popped, popped
+  entry's KEY). All pop lanes in a plan share one rank pool in lane
+  order — the j-th pop lane (counting POPMIN and POPK together) extracts
+  the j-th smallest live key, so k pop lanes ARE a bulk-pop-k. A pop
+  lane's `keys` field is ignored by the backend itself; under the sharded
+  engine it is the routing hint that selects WHICH shard's queue to pop
+  (per-shard relaxed pq semantics, arXiv:1509.07053). RANGE_DELETE ->
+  (any deleted, deleted count as u64): lane `keys` = lo, `vals` = hi,
+  removes [lo, hi); overlapping lanes attribute each deleted entry to the
+  first covering lane.
 * `Store` — the backend protocol: `init(capacity, **kw)` builds a
   jit/shard_map-safe pytree state, `apply(state, plan)` executes a plan,
   `scan(state, lo, hi, max_out)` is the ordered range query (unordered
@@ -32,9 +43,12 @@ common contract first: this module defines it.
     tiered3              §IX three-tier stack (hash -> skiplist -> spill)
     tiered3/lru          tiered3 with LRU-by-batch hot-tier eviction
     tiered3/size         tiered3 with size-aware hot-tier eviction
+    pq                   priority queue over the det skiplist: POPMIN /
+                         POPK bulk extraction (arXiv:1509.07053 design)
 
   The first six live in `store/backends.py`, the tier stacks in
-  `store/tiers.py` (policy semantics in docs/tiers.md). Prefixing any
+  `store/tiers.py` (policy semantics in docs/tiers.md), the priority
+  queue in `store/pq.py` (serving usage in docs/serving.md). Prefixing any
   registry string with `obs:` (e.g. `obs:tiered3/lru`) wraps the backend
   in the observability layer (`store/obs.py`): same results, plus a
   deterministic jit-carried metrics plane and host trace spans. Execution mode is
@@ -52,6 +66,12 @@ from typing import Any, Dict, NamedTuple, Protocol, runtime_checkable
 import jax.numpy as jnp
 
 OP_NONE, OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE = -1, 0, 1, 2, 3
+# Priority-queue + ordered-maintenance lane ops (PR 7). POPMIN and POPK
+# pop identically (shared lane-order rank pool: j-th pop lane gets the
+# j-th smallest live key) and differ only in the result: POPMIN returns
+# the popped value, POPK the popped key. RANGE_DELETE reads the lane as
+# [keys, vals) = [lo, hi) and returns the deleted count.
+OP_POPMIN, OP_POPK, OP_RANGE_DELETE = 4, 5, 6
 
 
 class OpPlan(NamedTuple):
@@ -125,8 +145,11 @@ class Store(Protocol):
 #   slots       live split-order slot count
 #   evictions / promotions   cumulative tier-policy movement counters
 #               (tiered stacks; preserved across `flush`)
+#   pops / pop_empty   cumulative successful pop lanes / pop lanes that
+#               found the queue empty (priority-queue backends)
 STATS_SCHEMA = ("size", "capacity", "tombstones", "hot_size", "cold_size",
-                "spill_size", "l2_tables", "slots", "evictions", "promotions")
+                "spill_size", "l2_tables", "slots", "evictions", "promotions",
+                "pops", "pop_empty")
 
 
 def uniform_stats(**counters) -> Dict[str, jnp.ndarray]:
@@ -155,7 +178,7 @@ def register(backend: Store) -> Store:
 def _ensure_builtin() -> None:
     # importing these modules registers the built-in backends; deferred so
     # api.py itself stays dependency-free (no import cycles)
-    from repro.store import backends, tiers  # noqa: F401
+    from repro.store import backends, pq, tiers  # noqa: F401
 
 
 def get_backend(name: str) -> Store:

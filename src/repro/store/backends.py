@@ -30,8 +30,8 @@ from repro.core.bits import EMPTY, KEY_INF
 from repro.core.layout import pow2_floor as _pow2
 from repro.store import exec as exec_
 from repro.store import obs
-from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OpPlan, OpResults,
-                             register, uniform_stats)
+from repro.store.api import (OP_DELETE, OP_FIND, OP_INSERT, OP_RANGE_DELETE,
+                             OpPlan, OpResults, register, uniform_stats)
 
 
 def finalize_results(ops, valid, found, fvals, inserted, existed,
@@ -50,18 +50,33 @@ def finalize_results(ops, valid, found, fvals, inserted, existed,
 
 
 def apply_linearized(state, plan: OpPlan, insert_fn, delete_fn, find_fn,
-                     absent_key):
-    """The shared INSERTS -> DELETES -> FINDS execution over masked batch
-    primitives. `find_fn(state, keys) -> (found, vals)`; `absent_key` is the
-    backend's sentinel for lanes that must not match anything."""
+                     absent_key, range_delete_fn=None):
+    """The shared INSERTS -> DELETES -> [RANGE_DELETES ->] FINDS execution
+    over masked batch primitives. `find_fn(state, keys) -> (found, vals)`;
+    `absent_key` is the backend's sentinel for lanes that must not match
+    anything. Ordered backends pass `range_delete_fn(state, lo, hi, mask)
+    -> (state, counts)` to execute `OP_RANGE_DELETE` lanes (lane keys = lo,
+    vals = hi, result = (any deleted, count)); backends without one leave
+    those lanes at the ok=False/vals=0 fall-through of
+    `finalize_results`."""
     valid = plan.mask & (plan.ops >= 0)
     ins_m = valid & (plan.ops == OP_INSERT)
     del_m = valid & (plan.ops == OP_DELETE)
     state, inserted, existed = insert_fn(state, plan.keys, plan.vals, ins_m)
     state, deleted = delete_fn(state, plan.keys, del_m)
+    rd_counts = None
+    if range_delete_fn is not None:
+        rd_m = valid & (plan.ops == OP_RANGE_DELETE)
+        state, rd_counts = range_delete_fn(state, plan.keys, plan.vals, rd_m)
     found, fvals = find_fn(state, jnp.where(valid, plan.keys, absent_key))
-    return state, finalize_results(plan.ops, valid, found, fvals, inserted,
-                                   existed, deleted)
+    res = finalize_results(plan.ops, valid, found, fvals, inserted,
+                           existed, deleted)
+    if rd_counts is not None:
+        is_rd = valid & (plan.ops == OP_RANGE_DELETE)
+        res = OpResults(ok=jnp.where(is_rd, rd_counts > 0, res.ok),
+                        vals=jnp.where(is_rd, rd_counts.astype(jnp.uint64),
+                                       res.vals))
+    return state, res
 
 
 class DetSkiplistBackend:
@@ -75,7 +90,8 @@ class DetSkiplistBackend:
     def apply(self, state, plan: OpPlan):
         return apply_linearized(
             state, plan, dsl.insert_batch, dsl.delete_batch,
-            lambda s, q: exec_.skiplist_find(s, q)[:2], KEY_INF)
+            lambda s, q: exec_.skiplist_find(s, q)[:2], KEY_INF,
+            range_delete_fn=dsl.range_delete_batch)
 
     def scan(self, state, lo, hi, max_out: int):
         return dsl.range_query(state, lo, hi, max_out)

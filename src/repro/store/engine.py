@@ -25,6 +25,7 @@ keeps its original API as thin wrappers over this module.
 """
 from __future__ import annotations
 
+import functools
 import math
 from contextlib import nullcontext
 from typing import Sequence
@@ -250,3 +251,21 @@ class StoreEngine:
         """Per-shard metrics plane (`sharded_metrics`); raises unless the
         engine was built over an `obs:` backend."""
         return sharded_metrics(self.backend, state)
+
+
+@functools.lru_cache(maxsize=None)
+def local_store_engine(backend: str, lanes: int,
+                       exec_mode: str | None = None) -> StoreEngine:
+    """A cached 1-shard StoreEngine over the first local device — the
+    serving layer's route into the Store API. Single-shard routing is the
+    identity partition (`owner_of` -> shard 0 for every key), so a plan's
+    lanes execute in their original order and pop lanes see the EXACT
+    global pop-min; pool_factor=1 because the pooled plan is exactly the
+    lane set. Cached by (backend string, lanes, exec_mode) so every
+    scheduler/prefix-cache call reuses one traced step per configuration
+    (flip modes at trace time by passing `exec_mode`, e.g. from
+    `exec.get_mode()` inside an `exec.exec_mode(...)` block)."""
+    mesh = jax.make_mesh((1,), ("local",),
+                         devices=np.array(jax.devices()[:1]))
+    return StoreEngine(mesh, ("local",), lanes, backend=backend,
+                       pool_factor=1, exec_mode=exec_mode)

@@ -21,8 +21,10 @@ Kernelized probes: the deterministic skiplist search
 (`kernels.skiplist_search`), the fixed-hash bucket probe
 (`kernels.hash_probe` — also the §IX hot-tier fast path), the FUSED
 tier-stack find (`kernels.tier_find` — hot probe + warm walk + per-run
-spill search in ONE pallas_call, dispatched by `tier_find`), and the
-two-level split-order per-table searchsorted (`kernels.splitorder_probe`).
+spill search in ONE pallas_call, dispatched by `tier_find`), the
+two-level split-order per-table searchsorted (`kernels.splitorder_probe`),
+and the priority-queue pop rank-select (`kernels.pq_pop`, dispatched by
+`pq_pop` — live-prefix cumsum + the shared `level_walk` descent).
 Probes whose access pattern defeats the static-shape or VMEM premise (the
 randomized skiplist's MAX_GAP-padded walk, ONE-level split-order's
 searchsorted over the full array — the global array does not fit VMEM,
@@ -229,6 +231,21 @@ def skiplist_find(s, queries, mode: str | None = None):
         return dsl.find_batch(s, queries)
     from repro.kernels.skiplist_search.ops import skiplist_find as sk_find
     return sk_find(s, queries, interpret=(m == "interpret"))
+
+
+@_probe
+def pq_pop(s, ranks, mask, mode: str | None = None):
+    """Priority-queue rank-select on a DetSkiplist: the rank-th smallest
+    live key per lane. Returns (found[K], keys[K] u64, idx[K] i32) — a pure
+    read; the pq backend commits the extraction with `pop_mark`. Both paths
+    apply identical not-found masking (keys=KEY_INF, idx=0), so results are
+    bit-identical across modes including the miss lanes."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import det_skiplist as dsl
+        return dsl.pop_rank_select(s, ranks, mask)
+    from repro.kernels.pq_pop.ops import pq_pop_ranks
+    return pq_pop_ranks(s, ranks, mask, interpret=(m == "interpret"))
 
 
 @_probe

@@ -73,6 +73,9 @@ METRICS_SCHEMA = (
     "hot_hits", "warm_hits", "spill_hits",
     "evictions", "demotions", "promotions",
     "spill_appends", "tombstones_reclaimed",
+    # priority-queue extraction (store/pq.py): successful pop lanes and
+    # pop lanes that found the queue empty
+    "pops", "pop_empty",
     # engine routing, per shard (store/engine.py)
     "routed_ops", "routed_bytes",
 )
@@ -85,8 +88,8 @@ SERVING_SCHEMA = ("ring_depth", "prefix_hits", "prefix_lookups",
 # span names (docs/observability.md lists what each phase wraps); `span`
 # accepts any name, but the instrumented modules stick to this taxonomy so
 # traces from different runs line up in Perfetto
-SPAN_TAXONOMY = ("route", "step", "find", "insert", "delete", "demote",
-                 "promote", "compact", "flush", "scan",
+SPAN_TAXONOMY = ("route", "step", "find", "insert", "delete", "pop",
+                 "demote", "promote", "compact", "flush", "scan",
                  "admit", "prefill", "decode")
 
 # bytes one routed op carries through the engine's all_to_all queues:

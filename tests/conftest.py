@@ -1,0 +1,17 @@
+"""Shared pytest hygiene for the tier-1 suite.
+
+The suite compiles hundreds of XLA CPU executables in one process (every
+backend x exec-mode x plan shape). The CPU client's JIT code memory is
+only reclaimed when the cached executables are dropped; past a few
+hundred live executables the next large compile can crash the process.
+Clearing jax's compilation caches at module boundaries bounds that
+growth — later modules simply recompile what they actually use.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_cache_growth():
+    yield
+    jax.clear_caches()

@@ -21,7 +21,8 @@ import jax.numpy as jnp  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import repro  # noqa: F401,E402
-from repro.store import OP_DELETE, OP_FIND, OP_INSERT  # noqa: E402
+from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_POPK,  # noqa: E402
+                         OP_POPMIN)
 from repro.store.engine import StoreEngine  # noqa: E402
 
 AXES = ("pod", "data")
@@ -29,7 +30,7 @@ LANES = 16
 N_SHARDS = 8
 ROUNDS = 4
 BACKENDS = ("det_skiplist", "twolevel_hash", "splitorder", "hash+skiplist",
-            "tiered3/lru")
+            "tiered3/lru", "pq")
 
 
 def check_backend(mesh, backend: str) -> None:
@@ -352,6 +353,77 @@ def check_metrics(mesh, backend: str = "obs:tiered3/lru") -> None:
           f"modes=jnp,interpret")
 
 
+def check_pq(mesh) -> None:
+    """PQ-OK: sharded bulk-pop-k on the `pq` backend. Pop lanes carry a
+    shard HINT in their key field (the per-shard relaxed-pq design), so
+    each round every shard extracts its LANES smallest live keys in one
+    routed plan. Per (shard, round) the popped multiset must equal the
+    next block of a per-shard sorted model (POPK answers keys, POPMIN the
+    stored values), the store must drain to empty with exact pops /
+    pop_empty counters per shard, and the whole run must be bit-identical
+    across exec modes."""
+    total = N_SHARDS * LANES
+    rng = np.random.default_rng(31)
+    per_shard = [2 * s + 3 for s in range(N_SHARDS)]          # uneven: 3..17
+    shard_keys = []
+    for s, n in enumerate(per_shard):
+        low = np.unique(rng.integers(1, 2**61, 2 * n, dtype=np.uint64))[:n]
+        shard_keys.append(((np.uint64(s) << np.uint64(61)) | low))
+    keys = np.zeros(total, np.uint64)
+    flat = np.concatenate(shard_keys)
+    keys[:len(flat)] = flat
+    ins = np.full(total, -1, np.int32)
+    ins[:len(flat)] = OP_INSERT
+    hints = (np.arange(total, dtype=np.uint64) % N_SHARDS) << np.uint64(61)
+
+    outs_by_mode = {}
+    for mode in ("jnp", "interpret"):
+        eng = StoreEngine(mesh, AXES, LANES, backend="pq", pool_factor=4,
+                          exec_mode=mode)
+        state = jax.device_put(eng.init(512), eng.sharding)
+        put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+        state, _, ok, dropped = eng.step(state, put(ins), put(keys),
+                                         put(keys + 1))
+        assert np.asarray(ok)[:len(flat)].all() and int(dropped) == 0, mode
+
+        model = [sorted(int(k) for k in sk) for sk in shard_keys]
+        expect_pops = np.zeros(N_SHARDS, np.int64)
+        expect_empty = np.zeros(N_SHARDS, np.int64)
+        rnd, outs = 0, []
+        while True:
+            op = OP_POPK if rnd % 2 == 0 else OP_POPMIN
+            state, res, ok, _ = eng.step(
+                state, put(np.full(total, op, np.int32)), put(hints),
+                put(np.zeros(total, np.uint64)))
+            ok, res = np.asarray(ok), np.asarray(res)
+            outs.append((ok.copy(), res.copy()))
+            for s in range(N_SHARDS):
+                lanes = (np.arange(total) % N_SHARDS == s) & ok
+                got = sorted(int(v) for v in res[lanes])
+                if op == OP_POPMIN:                 # value = key + 1
+                    got = [v - 1 for v in got]
+                k = min(LANES, len(model[s]))
+                assert got == model[s][:k], (mode, rnd, s)
+                model[s] = model[s][k:]
+                expect_pops[s] += k
+                expect_empty[s] += LANES - k
+            rnd += 1
+            if not ok.any():
+                break
+        stats = eng.stats(state)
+        assert int(stats["size"].sum()) == 0, mode   # drained dry
+        assert stats["pops"].tolist() == expect_pops.tolist(), mode
+        assert stats["pop_empty"].tolist() == expect_empty.tolist(), mode
+        outs_by_mode[mode] = (outs, jax.tree.leaves(state))
+    (oa, sa), (ob, sb) = outs_by_mode["jnp"], outs_by_mode["interpret"]
+    for (ok_a, v_a), (ok_b, v_b) in zip(oa, ob):
+        assert (ok_a == ok_b).all() and (v_a == v_b).all()
+    for a, b in zip(sa, sb):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    print(f"PQ-OK backend=pq shards={N_SHARDS} per_shard={per_shard} "
+          f"modes=jnp,interpret")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
@@ -362,6 +434,7 @@ def main() -> int:
     check_tier_residency(mesh)
     check_fused_vs_unfused(mesh)
     check_metrics(mesh)
+    check_pq(mesh)
     return 0
 
 

@@ -1,0 +1,339 @@
+"""Tests for the `pq` priority-queue Store backend and the pop/range-delete
+lane ops.
+
+The load-bearing properties:
+
+* **Bulk-pop determinism** — the j-th pop lane of a plan receives the j-th
+  smallest live key (one shared rank pool in lane order), POPMIN answers
+  the popped VALUE and POPK the popped KEY, and pops past empty are clean
+  misses (ok=False, vals=0) that count `pop_empty`.
+* **Linearization** — INSERTS -> DELETES -> RANGE_DELETES -> POPS -> FINDS
+  within one plan, so same-plan inserts are poppable and finds observe the
+  post-pop heap.
+* **Exec-mode parity** — results AND post-apply state pytrees bit-identical
+  between `jnp` and the kernelized modes (`kernels/pq_pop` rank-select +
+  the shared level walk), the same contract every other probe obeys.
+* **Model agreement** — a seeded mixed workload tracks a host sorted-dict
+  model exactly.
+* **Range delete** — OP_RANGE_DELETE removes [lo, hi) on both ordered
+  backends (det_skiplist and pq), reports per-lane counts, attributes
+  overlapping lanes deterministically, and scans never see deleted keys.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (enables x64)
+from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_POPK,
+                         OP_POPMIN, OP_RANGE_DELETE, get_backend, make_plan)
+from repro.store import exec as exec_
+
+MODES = exec_.runnable_modes()
+
+
+def u64(xs):
+    return jnp.asarray(np.array(xs, dtype=np.uint64))
+
+
+def i32(xs):
+    return np.asarray(xs, np.int32)
+
+
+def seeded(be, keys):
+    st = be.init(1024)
+    ks = u64(keys)
+    st, res = be.apply(st, make_plan(np.full(len(keys), OP_INSERT, np.int32),
+                                     ks, ks * jnp.uint64(10)))
+    assert res.ok.all()
+    return st
+
+
+# ---------------------------------------------------------------------------
+# pop semantics
+# ---------------------------------------------------------------------------
+
+class TestPopSemantics:
+    def test_popmin_vs_popk_result_forms(self):
+        be = get_backend("pq")
+        st = seeded(be, [30, 10, 20])
+        st, res = be.apply(st, make_plan(i32([OP_POPMIN, OP_POPK]),
+                                         u64([0, 0]), u64([0, 0])))
+        assert res.ok.all()
+        assert int(res.vals[0]) == 100     # POPMIN -> value of key 10
+        assert int(res.vals[1]) == 20      # POPK   -> the key itself
+
+    def test_bulk_pop_rank_pool_in_lane_order(self):
+        be = get_backend("pq")
+        st = seeded(be, [50, 10, 40, 20, 30])
+        # mixed POPK/POPMIN lanes share ONE rank pool in lane order
+        st, res = be.apply(st, make_plan(
+            i32([OP_POPK, OP_POPMIN, OP_POPK, OP_POPMIN]),
+            u64([0] * 4), u64([0] * 4)))
+        assert res.ok.all()
+        assert [int(v) for v in res.vals] == [10, 200, 30, 400]
+        st, res = be.apply(st, make_plan(i32([OP_POPK]), u64([0]), u64([0])))
+        assert res.ok.all() and int(res.vals[0]) == 50
+
+    def test_pop_empty_is_clean_miss(self):
+        be = get_backend("pq")
+        st = seeded(be, [10])
+        st, res = be.apply(st, make_plan(i32([OP_POPK, OP_POPK, OP_POPK]),
+                                         u64([0] * 3), u64([0] * 3)))
+        assert [bool(b) for b in res.ok] == [True, False, False]
+        assert [int(v) for v in res.vals] == [10, 0, 0]
+        stats = be.stats(st)
+        assert int(stats["pops"]) == 1 and int(stats["pop_empty"]) == 2
+        # masked-off pop lanes are not misses
+        st, res = be.apply(st, make_plan(i32([OP_POPK]), u64([0]), u64([0]),
+                                         np.array([False])))
+        assert not bool(res.ok[0])
+        assert int(be.stats(st)["pop_empty"]) == 2
+
+    def test_same_plan_insert_then_pop_linearization(self):
+        be = get_backend("pq")
+        st = seeded(be, [20])
+        # the insert of 5 commits BEFORE the pops; the find runs after them
+        st, res = be.apply(st, make_plan(
+            i32([OP_POPK, OP_INSERT, OP_POPK, OP_FIND]),
+            u64([0, 5, 0, 20]), u64([0, 55, 0, 0])))
+        assert [int(v) for v in res.vals[:3]] == [5, 0, 20]
+        assert not bool(res.ok[3])           # 20 was popped by lane 2
+        assert int(be.stats(st)["size"]) == 0
+
+    def test_delete_then_pop_skips_tombstones(self):
+        be = get_backend("pq")
+        st = seeded(be, [10, 20, 30])
+        st, res = be.apply(st, make_plan(i32([OP_DELETE, OP_POPK]),
+                                         u64([10, 0]), u64([0, 0])))
+        assert int(res.vals[1]) == 20        # 10 died first in the same plan
+        # pop across a compaction boundary still deterministic
+        st, res = be.apply(st, make_plan(i32([OP_POPK]), u64([0]), u64([0])))
+        assert int(res.vals[0]) == 30
+
+    def test_scan_and_find_after_pops(self):
+        be = get_backend("pq")
+        st = seeded(be, [10, 20, 30, 40])
+        st, _ = be.apply(st, make_plan(i32([OP_POPK, OP_POPK]),
+                                       u64([0, 0]), u64([0, 0])))
+        cnt, ks, _, _ = be.scan(st, u64([0]), u64([2**63]), 8)
+        assert int(cnt[0]) == 2
+        assert [int(k) for k in ks[0, :2]] == [30, 40]
+        _, res = be.apply(st, make_plan(i32([OP_FIND, OP_FIND]),
+                                        u64([10, 30]), u64([0, 0])))
+        assert [bool(b) for b in res.ok] == [False, True]
+
+
+# ---------------------------------------------------------------------------
+# model agreement + determinism
+# ---------------------------------------------------------------------------
+
+def _model_apply(model, ops, keys, vals, mask):
+    """Host sorted-dict oracle for one plan under the pq linearization."""
+    out_ok, out_vals = [], []
+    results = {}
+    for i, (o, k, v, m) in enumerate(zip(ops, keys, vals, mask)):
+        if m and o == OP_INSERT:             # INSERT -> (applied, existed)
+            results[i] = (True, 1 if k in model else 0)
+            model.setdefault(k, v)
+    for i, (o, k, m) in enumerate(zip(ops, keys, mask)):
+        if m and o == OP_DELETE:             # DELETE -> (removed, 0)
+            results[i] = (k in model, 0)
+            model.pop(k, None)
+    pop_lanes = [i for i, (o, m) in enumerate(zip(ops, mask))
+                 if m and o in (OP_POPMIN, OP_POPK)]
+    popped = sorted(model)[:len(pop_lanes)]
+    for i, lane in enumerate(pop_lanes):
+        if i < len(popped):
+            k = popped[i]
+            results[lane] = (True, model[k] if ops[lane] == OP_POPMIN else k)
+            del model[k]
+        else:
+            results[lane] = (False, 0)
+    for i, (o, k, m) in enumerate(zip(ops, keys, mask)):
+        if m and o == OP_FIND:
+            results[i] = (k in model, model.get(k, 0))
+    for i in range(len(ops)):
+        ok, v = results.get(i, (False, 0))
+        out_ok.append(ok)
+        out_vals.append(v)
+    return model, out_ok, out_vals
+
+
+def _pq_plans(seed, n_rounds=6, width=32):
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(1, 2**62, 48, dtype=np.uint64)
+    plans = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE, OP_POPMIN, OP_POPK],
+                         width, p=[0.3, 0.35, 0.1, 0.15, 0.1]).astype(np.int32)
+        keys = rng.choice(pool, width)
+        mask = rng.random(width) > 0.05
+        plans.append(make_plan(ops, keys, keys + 1, mask))
+    return plans
+
+
+class TestModelAndDeterminism:
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_seeded_workload_matches_sorted_model(self, seed):
+        be = get_backend("pq")
+        st = be.init(1024)
+        model = {}
+        for plan in _pq_plans(seed):
+            st, res = be.apply(st, plan)
+            model, ok, vals = _model_apply(
+                model, np.asarray(plan.ops), np.asarray(plan.keys),
+                np.asarray(plan.vals), np.asarray(plan.mask))
+            assert np.array_equal(np.asarray(res.ok), ok)
+            assert np.array_equal(np.asarray(res.vals),
+                                  np.asarray(vals, np.uint64))
+        assert int(be.stats(st)["size"]) == len(model)
+
+    def test_replay_bit_identical(self):
+        be = get_backend("pq")
+        outs = []
+        for _ in range(2):
+            st = be.init(512)
+            acc = []
+            for plan in _pq_plans(3):
+                st, res = be.apply(st, plan)
+                acc.append((np.asarray(res.ok), np.asarray(res.vals)))
+            outs.append((acc, st))
+        for (a_ok, a_v), (b_ok, b_v) in zip(*[o[0] for o in outs]):
+            assert np.array_equal(a_ok, b_ok) and np.array_equal(a_v, b_v)
+        for a, b in zip(jax.tree.leaves(outs[0][1]),
+                        jax.tree.leaves(outs[1][1])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# exec-mode parity (jnp reference vs kernels/pq_pop)
+# ---------------------------------------------------------------------------
+
+class TestExecModeParity:
+    def test_results_and_state_parity(self):
+        be = get_backend("pq")
+        ref_out = None
+        for mode in MODES:
+            with exec_.exec_mode(mode):
+                st = be.init(512)
+                acc = []
+                for plan in _pq_plans(5):
+                    st, res = be.apply(st, plan)
+                    acc.append((np.asarray(res.ok), np.asarray(res.vals)))
+            out = (acc, jax.tree.leaves(st))
+            if ref_out is None:
+                ref_out = out
+                continue
+            for (a_ok, a_v), (b_ok, b_v) in zip(ref_out[0], out[0]):
+                assert np.array_equal(a_ok, b_ok), f"ok diverges in {mode}"
+                assert np.array_equal(a_v, b_v), f"vals diverge in {mode}"
+            for a, b in zip(ref_out[1], out[1]):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    f"state diverges in {mode}"
+
+    def test_obs_pop_counters_mode_parity(self):
+        be = get_backend("obs:pq")
+        ref = None
+        for mode in MODES:
+            with exec_.exec_mode(mode):
+                st = be.init(512)
+                for plan in _pq_plans(9, n_rounds=3):
+                    st, _ = be.apply(st, plan)
+                # over-drain so the pop_empty counter fires too
+                st, _ = be.apply(st, make_plan(
+                    np.full(64, OP_POPK, np.int32), u64([0] * 64),
+                    u64([0] * 64)))
+                m = {k: int(v) for k, v in be.metrics(st).items()}
+            assert m["pops"] > 0 and m["pop_empty"] > 0
+            if ref is None:
+                ref = m
+            assert m == ref, f"metrics diverge in mode {mode}"
+
+    def test_pop_under_jit(self):
+        be = get_backend("pq")
+        st = seeded(be, [30, 10, 20])
+        plan = make_plan(i32([OP_POPK, OP_POPK]), u64([0, 0]), u64([0, 0]))
+        st2, res = jax.jit(be.apply)(st, plan)
+        assert [int(v) for v in res.vals] == [10, 20]
+        assert int(be.stats(st2)["size"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# range delete (both ordered backends)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["det_skiplist", "pq"])
+class TestRangeDelete:
+    def test_deletes_half_open_interval(self, name):
+        be = get_backend(name)
+        st = seeded(be, [10, 20, 30, 40, 50])
+        st, res = be.apply(st, make_plan(i32([OP_RANGE_DELETE]),
+                                         u64([20]), u64([41])))
+        assert bool(res.ok[0]) and int(res.vals[0]) == 3    # 20, 30, 40
+        cnt, ks, _, _ = be.scan(st, u64([0]), u64([2**63]), 8)
+        assert int(cnt[0]) == 2
+        assert [int(k) for k in ks[0, :2]] == [10, 50]
+        # empty interval: ok=False, count 0
+        st, res = be.apply(st, make_plan(i32([OP_RANGE_DELETE]),
+                                         u64([20]), u64([41])))
+        assert not bool(res.ok[0]) and int(res.vals[0]) == 0
+
+    def test_overlapping_lanes_attribute_once(self, name):
+        be = get_backend(name)
+        st = seeded(be, [10, 20, 30, 40])
+        # both lanes cover 20 and 30; the FIRST covering lane owns each key
+        st, res = be.apply(st, make_plan(
+            i32([OP_RANGE_DELETE, OP_RANGE_DELETE]),
+            u64([15, 10]), u64([35, 45])))
+        assert [int(v) for v in res.vals] == [2, 2]
+        assert int(be.stats(st)["size"]) == 0
+
+    def test_linearizes_before_pops_and_finds(self, name):
+        be = get_backend(name)
+        st = seeded(be, [10, 20, 30])
+        ops = [OP_RANGE_DELETE, OP_FIND]
+        keys, vals = [5, 10], [25, 0]
+        if name == "pq":
+            ops.append(OP_POPK)
+            keys.append(0)
+            vals.append(0)
+        st, res = be.apply(st, make_plan(i32(ops), u64(keys), u64(vals)))
+        assert int(res.vals[0]) == 2         # 10 and 20 deleted
+        assert not bool(res.ok[1])           # FIND sees the post-delete heap
+        if name == "pq":
+            assert int(res.vals[2]) == 30    # pop skips the deleted range
+
+    def test_mode_parity(self, name):
+        be = get_backend(name)
+        ref = None
+        for mode in MODES:
+            with exec_.exec_mode(mode):
+                st = seeded(be, [10, 20, 30, 40, 50, 60])
+                st, res = be.apply(st, make_plan(
+                    i32([OP_RANGE_DELETE, OP_FIND, OP_RANGE_DELETE]),
+                    u64([25, 60, 55]), u64([45, 0, 61])))
+                out = (np.asarray(res.ok), np.asarray(res.vals),
+                       [np.asarray(x) for x in jax.tree.leaves(st)])
+            if ref is None:
+                ref = out
+                continue
+            assert np.array_equal(ref[0], out[0])
+            assert np.array_equal(ref[1], out[1])
+            for a, b in zip(ref[2], out[2]):
+                assert np.array_equal(a, b), f"state diverges in {mode}"
+
+    def test_unordered_backends_report_miss(self, name):
+        del name
+        be = get_backend("twolevel_hash")
+        st = be.init(256)
+        ks = u64([10, 20])
+        st, _ = be.apply(st, make_plan(np.full(2, OP_INSERT, np.int32),
+                                       ks, ks))
+        st, res = be.apply(st, make_plan(i32([OP_RANGE_DELETE]),
+                                         u64([0]), u64([100])))
+        # hash backends don't implement range delete: clean per-lane miss
+        assert not bool(res.ok[0]) and int(res.vals[0]) == 0
+        _, res = be.apply(st, make_plan(i32([OP_FIND, OP_FIND]), ks, ks))
+        assert res.ok.all()

@@ -16,10 +16,11 @@ def test_sharded_store_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     out = subprocess.run([sys.executable, prog], env=env, capture_output=True,
-                         text=True, timeout=900)
+                         text=True, timeout=1500)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     assert "STORE-OK" in out.stdout
     assert "RANGE-OK" in out.stdout
     assert "UNEVEN-OK" in out.stdout
     assert "RESIDENCY-OK" in out.stdout
     assert "FUSED-OK" in out.stdout
+    assert "PQ-OK" in out.stdout
