@@ -13,11 +13,16 @@ this in smoke mode and uploads the artifact). Derived fields record the
 final tier residency and the cumulative eviction/promotion counters, so
 the JSON shows WHERE the policies put the data, not just how fast the
 batch ran. Since the fused tier find, the tiered rows run BOTH probe
-paths: the registered backends (fused — one `exec.tier_find` dispatch per
-probe phase) and an unfused `TieredBackend(fused=False)` twin of each (the
-original dispatch-per-tier chain), with the measured exec-dispatch count
-per churn plan in every row — the fused-vs-unfused comparison is the
-dispatch reduction AND its wall-time effect on one table. On CPU the
+paths: the registered backends (fused — the whole apply prologue is one
+`exec.tier_apply` update dispatch and the FIND phase one `exec.tier_find`
+probe dispatch) and an unfused `TieredBackend(fused=False)` twin of each
+(the original dispatch-per-tier chain), with the measured exec-dispatch
+counts per apply in every row, split per half
+(``probe_dispatches_per_apply`` / ``update_dispatches_per_apply``, summed
+in ``dispatches_per_apply``) — the fused-vs-unfused comparison is the
+dispatch reduction AND its wall-time effect on one table, and the CI gate
+(`tools/bench_diff.py --assert-within`) fails any row whose
+``dispatches_per_apply`` grows against the baseline artifact. On CPU the
 `interpret` rows measure Pallas-interpreter overhead (expected to lose to
 `jnp`); `pallas` rows appear on TPU. Results are bit-identical across
 modes, backends, and probe paths by the store contract, so every
@@ -96,8 +101,11 @@ def run(out_dir: str | None = None):
                             chunk + 1))
                 stats = {k: int(v) for k, v in be.stats(st).items()}
                 assert stats["size"] == PRELOAD, (name, stats)
-                # dispatches per plan, read off the single preload trace
+                # dispatches per apply, read off the single preload trace
+                # (dispatch structure is plan-shape-independent), split by
+                # half: probe (membership/FIND) vs update (insert prologue)
                 dispatches = md.n
+                d_probe, d_update = md.probe, md.update
                 st, _ = step(st, churn)      # settle residency post-churn
                 ts = bench_times(lambda: step(st, churn))
                 t = float(np.median(ts))
@@ -109,7 +117,9 @@ def run(out_dir: str | None = None):
                        fused=("no" if tag == "/unfused" else
                               "yes" if name in TIERED else "flat"),
                        observed=("yes" if tag == "/obs" else "no"),
-                       dispatches_per_plan=dispatches,
+                       dispatches_per_apply=dispatches,
+                       probe_dispatches_per_apply=d_probe,
+                       update_dispatches_per_apply=d_update,
                        hot_size=stats["hot_size"],
                        cold_size=stats["cold_size"],
                        spill_size=stats["spill_size"],

@@ -50,8 +50,10 @@ class DetSkiplist(NamedTuple):
     term_keys: jnp.ndarray            # [C] uint64 sorted (marked entries stay)
     term_vals: jnp.ndarray            # [C] uint64
     term_mark: jnp.ndarray            # [C] bool tombstones
+    term_stamp: jnp.ndarray           # [C] int32 batch clock at insert/revive
     n_term: jnp.ndarray               # scalar int32 — physical entries
     n_marked: jnp.ndarray             # scalar int32
+    clock: jnp.ndarray                # scalar int32 — ticked once per apply
     level_keys: tuple                 # L arrays [C_l] uint64 (max of group)
     level_child: tuple                # L arrays [C_l] int32  (group start)
     level_count: jnp.ndarray          # [L] int32
@@ -84,8 +86,10 @@ def skiplist_init(capacity: int) -> DetSkiplist:
         term_keys=term_keys,
         term_vals=term_vals,
         term_mark=jnp.zeros((capacity,), bool),
+        term_stamp=jnp.zeros((capacity,), jnp.int32),
         n_term=jnp.int32(0),
         n_marked=jnp.int32(0),
+        clock=jnp.int32(0),
         level_keys=tuple(jnp.full((c,), KEY_INF) for c in caps),
         level_child=tuple(jnp.zeros((c,), jnp.int32) for c in caps),
         level_count=jnp.zeros((len(caps),), jnp.int32),
@@ -201,10 +205,13 @@ def insert_batch(s: DetSkiplist, keys: jnp.ndarray, vals: jnp.ndarray,
     revive = match & s.term_mark[posc] & ~dup
     exists = match & ~s.term_mark[posc]
 
-    # revive in place (first lane among in-batch dups wins — dup already false)
+    # revive in place (first lane among in-batch dups wins — dup already
+    # false); a revival is a re-insertion, so its snapshot stamp refreshes
+    # to the current batch clock (upserts on LIVE entries do not re-stamp)
     rpos = jnp.where(revive, posc, C)
     term_mark = s.term_mark.at[rpos].set(False, mode="drop")
     term_vals = s.term_vals.at[rpos].set(sv, mode="drop")
+    term_stamp = s.term_stamp.at[rpos].set(s.clock, mode="drop")
     n_marked = s.n_marked - jnp.sum(revive).astype(jnp.int32)
 
     new = sm & ~match & ~dup
@@ -230,9 +237,11 @@ def insert_batch(s: DetSkiplist, keys: jnp.ndarray, vals: jnp.ndarray,
     tv = jnp.zeros((C,), jnp.uint64).at[dest_old].set(term_vals, mode="drop")
     tv = tv.at[dest_new].set(newv, mode="drop")
     tm = jnp.zeros((C,), bool).at[dest_old].set(term_mark, mode="drop")
-    # new entries unmarked (already False)
+    # new entries unmarked (already False); their stamp = this batch's clock
+    ts = jnp.zeros((C,), jnp.int32).at[dest_old].set(term_stamp, mode="drop")
+    ts = ts.at[dest_new].set(s.clock, mode="drop")
 
-    s2 = s._replace(term_keys=tk, term_vals=tv, term_mark=tm,
+    s2 = s._replace(term_keys=tk, term_vals=tv, term_mark=tm, term_stamp=ts,
                     n_term=s.n_term + n_new, n_marked=n_marked)
     s2 = _rebuild_levels(s2)
 
@@ -287,10 +296,11 @@ def compact(s: DetSkiplist) -> DetSkiplist:
     dest = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32)) - 1, C)
     tk = jnp.full((C,), KEY_INF).at[dest].set(s.term_keys, mode="drop")
     tv = jnp.zeros((C,), jnp.uint64).at[dest].set(s.term_vals, mode="drop")
+    ts = jnp.zeros((C,), jnp.int32).at[dest].set(s.term_stamp, mode="drop")
     n = jnp.sum(keep).astype(jnp.int32)
     # derive cleared fields from inputs (keeps shard_map varying-axis types
     # identical across lax.cond branches)
-    s2 = s._replace(term_keys=tk, term_vals=tv,
+    s2 = s._replace(term_keys=tk, term_vals=tv, term_stamp=ts,
                     term_mark=s.term_mark & False, n_term=n,
                     n_marked=s.n_marked * 0)
     return _rebuild_levels(s2)
@@ -300,12 +310,21 @@ def compact(s: DetSkiplist) -> DetSkiplist:
 # Range search (the skiplist's raison d'être vs hash tables)
 # ---------------------------------------------------------------------------
 
-def range_query(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
+def range_query(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int,
+                as_of_batch=None):
     """Keys in [lo, hi), batched over Q query rows.
 
     Returns (count[Q], keys[Q, max_out], vals[Q, max_out], valid[Q, max_out]).
     Terminal contiguity makes this a gather — the paper's argument for
     skiplists over BSTs (follow the linked list vs depth-first traversal).
+
+    `as_of_batch`: snapshot scan — additionally exclude entries whose
+    insert/revive stamp is LATER than the given batch clock (entries of
+    batch b carry stamp b, so `as_of_batch=b` sees batches 0..b). Tombstones
+    still hide deleted entries: this is a filter, not time travel — a key
+    deleted since its insertion does not reappear. None (the default) skips
+    the stamp plane entirely, which keeps this routine shared with states
+    that don't carry one (the randomized skiplist).
     """
     i_lo = jnp.searchsorted(s.term_keys, lo, side="left").astype(jnp.int32)
     i_hi = jnp.searchsorted(s.term_keys, hi, side="left").astype(jnp.int32)
@@ -315,6 +334,10 @@ def range_query(s: DetSkiplist, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
     valid = in_range & ~s.term_mark[idx]
     # exact count (including beyond max_out): prefix-sum of live entries
     live = (~s.term_mark) & (s.term_keys != KEY_INF)
+    if as_of_batch is not None:
+        vis = s.term_stamp <= jnp.asarray(as_of_batch, jnp.int32)
+        valid = valid & vis[idx]
+        live = live & vis
     cs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(live.astype(jnp.int32))])
     count = cs[i_hi] - cs[i_lo]
     return count, s.term_keys[idx], s.term_vals[idx], valid

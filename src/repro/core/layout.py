@@ -156,6 +156,20 @@ def spill_arrays(capacity: int):
 # apply, 1 per flush).
 MAX_SPILL_RUNS = 16
 
+# Spill maintenance thresholds — ONE source of truth for the tier stack's
+# compaction policy (`store.tiers.spill_maintain`), the kernels' static
+# sizing assumptions, and the docs:
+#   SPILL_COMPACT_DEAD_FRAC   compact when tombstones exceed 1/FRAC of the
+#                             appended total (the churn rule — the same 25%
+#                             discipline as the skiplist compaction)
+#   SPILL_RUNS_PER_APPLY      worst-case sorted runs ONE apply can append
+#                             (eviction demotes, insert overflow, promotion
+#                             demotes); compacting when `runs +
+#                             RUNS_PER_APPLY > MAX_SPILL_RUNS` is what makes
+#                             the run cap an invariant rather than a hope
+SPILL_COMPACT_DEAD_FRAC = 4
+SPILL_RUNS_PER_APPLY = 3
+
 
 def run_offsets(run_start: jnp.ndarray, n: jnp.ndarray,
                 max_runs: int = MAX_SPILL_RUNS) -> jnp.ndarray:
@@ -184,6 +198,13 @@ class SpillLayout(NamedTuple):
     key_lo: jnp.ndarray    # [S] uint32
     dead: jnp.ndarray      # [S] int8 tombstones
     run_off: jnp.ndarray   # [MAX_SPILL_RUNS + 1] int32 run boundaries
+
+    # maintenance thresholds (class constants, not tuple fields) — the
+    # names the tier stack and the docs read; values owned by the module
+    # constants above so layout sizing and compaction policy stay in sync
+    MAX_RUNS = MAX_SPILL_RUNS
+    COMPACT_DEAD_FRAC = SPILL_COMPACT_DEAD_FRAC
+    RUNS_PER_APPLY = SPILL_RUNS_PER_APPLY
 
 
 def spill_layout(keys: jnp.ndarray, dead: jnp.ndarray,

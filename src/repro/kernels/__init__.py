@@ -16,6 +16,16 @@ hash_probe        batched fixed-hash bucket probe over the bucket-major
 pq_pop            batched priority-queue pop: live-prefix rank-select over
                   the terminal level + the shared skiplist_search
                   `level_walk` descent (the `pq` backend's POPMIN/POPK)
+tier_find         fused tier-stack FIND: hot bucket probe + warm level
+                  walk + per-run spill binary search in ONE dispatch,
+                  bodies shared with hash_probe / skiplist_search
+tier_apply        fused tier-stack APPLY prologue: the tier_find probes
+                  + the hot-insert linearization and eviction-policy
+                  victim selection in ONE dispatch, with the spill tier
+                  streamed through VMEM chunks under a scalar-prefetched
+                  `run_offsets` plane (`pltpu.PrefetchScalarGridSpec`)
+splitorder_probe  two-level split-ordered hash probe (recursive-split
+                  bucket directory + sorted-segment search)
 
 The store kernels (skiplist_search, hash_probe) are never called directly
 by backends: `repro.store.exec` dispatches between them and their jnp

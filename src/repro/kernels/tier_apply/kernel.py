@@ -1,0 +1,291 @@
+"""Fused tier-apply — membership probes + the hot-insert prologue in ONE
+Pallas dispatch.
+
+PR 5 fused the tier stack's FIND chain; the write half still ran as
+separate phases: a membership probe dispatch, then the
+`bucket_insert_plan` sort prologue, victim selection, and scatters as jnp
+phases. This kernel folds the whole apply prologue into the fused find's
+launch: per plan, ONE `pallas_call` probes all three tiers for residency
+(hot bucket probe, warm level walk, per-run spill binary search), applies
+the miss fall-through, and — for the lanes that should try the hot tier —
+runs the insert linearization (in-batch dup rank, pre-batch existence,
+within-slot candidate rank, nth-empty placement column) plus the eviction
+policy's victim selection over the metadata plane. The u64 scatters and
+victim gathers commit in the glue (`ops.py`) where u64 lanes exist.
+
+Shared bodies, not copies: the hot probe is
+`kernels.hash_probe.kernel.bucket_probe`, the warm walk is
+`kernels.skiplist_search.kernel.level_walk` — the same functions the fused
+find uses. The lane math mirrors `core.hashtable.bucket_insert_plan` /
+`kernels.tier_apply.ref.hot_insert_evict` term by term over (hi, lo) u32
+planes, so fused/unfused bit-identity is by construction.
+
+Scalar-prefetched spill probes (`pltpu.PrefetchScalarGridSpec`): the
+`run_offsets` boundary plane and the eviction cap arrive as SMEM scalars
+BEFORE the grid runs, and the grid iterates over fixed-size CHUNKS of the
+spill key/tombstone planes — each step binary-searches every run's
+intersection with its chunk and accumulates hits in VMEM scratch (the
+sequential TPU grid keeps scratch live across steps). The spill tier
+therefore never needs to be VMEM-resident as a whole: chunks stream
+through, which is the unlock for HBM/host-resident spill tiers of millions
+of keys. All query-plane work (membership compose + insert prologue) is
+predicated onto the LAST grid step.
+
+Victim selection without an in-kernel argsort: the reference takes entry
+`clip(ev_rank, 0, B-1)` of a stable argsort over the policy score row.
+Stable-sort position of column j is `#{k: (score_k, k) <lex (score_j, j)}`
+— a counting rank, computed here with a static loop over the B bucket
+columns (B is a small static width; positions are distinct, so exactly one
+column matches each target rank). Provably equal to the argsort take.
+
+Outputs (all [K], sorted (slot, key) lane order; i8 flags / i32 columns):
+in_warm, in_spill, placed, exists, dup, need_ev, col, vcol, ecol.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layout import key_lt as _lt
+from repro.kernels.hash_probe.kernel import bucket_probe
+from repro.kernels.skiplist_search.kernel import level_walk
+
+# numpy scalar, not a jnp array: pallas_call rejects closure-captured
+# jax-array constants, while numpy scalars inline as literals at trace time
+_U32MAX = np.uint32(0xFFFFFFFF)
+
+
+def spill_chunk_probe(qh, ql, sp_hi, sp_lo, sp_dead, off, cbase, *,
+                      max_runs: int, chunk: int):
+    """One chunk's contribution to the cold-tier membership probe: binary
+    search each run's intersection with the chunk window
+    [cbase, cbase + chunk) — `sp_*` are the CHUNK blocks, indexed locally.
+    Run keys strictly increase, so a query's match position lies in exactly
+    one chunk: windows that don't contain it converge to a boundary or a
+    different key and stay dead. ORing the per-chunk results over the grid
+    reproduces `kernels.tier_find.kernel.spill_run_probe`'s found bit
+    exactly. Returns found bool[T] for this chunk."""
+    t = qh.shape[0]
+    r = max_runs
+    cend = cbase + chunk
+    lo = jnp.broadcast_to(jnp.clip(off[:r], cbase, cend)[None, :],
+                          (t, r)).astype(jnp.int32)
+    end = jnp.broadcast_to(jnp.clip(off[1:r + 1], cbase, cend)[None, :],
+                           (t, r)).astype(jnp.int32)
+    hi = end
+    qh2, ql2 = qh[:, None], ql[:, None]
+    for _ in range(max(chunk.bit_length(), 1)):
+        cont = lo < hi
+        mid = (lo + hi) // 2
+        lmid = jnp.clip(mid - cbase, 0, chunk - 1)
+        mh = jnp.take(sp_hi, lmid.reshape(-1), axis=0).reshape(t, r)
+        ml = jnp.take(sp_lo, lmid.reshape(-1), axis=0).reshape(t, r)
+        less = _lt(mh, ml, qh2, ql2)            # sp[mid] < q
+        lo = jnp.where(cont & less, mid + 1, lo)
+        hi = jnp.where(cont & ~less, mid, hi)
+    lpos = jnp.clip(lo - cbase, 0, chunk - 1)
+    p_hi = jnp.take(sp_hi, lpos.reshape(-1), axis=0).reshape(t, r)
+    p_lo = jnp.take(sp_lo, lpos.reshape(-1), axis=0).reshape(t, r)
+    p_dead = jnp.take(sp_dead, lpos.reshape(-1), axis=0).reshape(t, r)
+    live = (lo < end) & (p_hi == qh2) & (p_lo == ql2) & (p_dead == 0)
+    return jnp.any(live, axis=1)
+
+
+def _ta_kernel(*refs, levels: int, fanout: int, policy: str,
+               has_spill: bool, max_runs: int, chunk: int, n_chunks: int):
+    if has_spill:
+        off_ref, me_ref = refs[0], refs[1]
+        (skh_ref, skl_ref, ss_ref, sm_ref, krs_ref, srs_ref,
+         kh_ref, kl_ref, meta_ref, lh_ref, ll_ref, lc_ref,
+         th_ref, tl_ref, tm_ref, sph_ref, spl_ref, spd_ref) = refs[2:20]
+        outs = refs[20:29]
+        acc_ref = refs[29]
+    else:
+        me_ref = refs[0]
+        (skh_ref, skl_ref, ss_ref, sm_ref, krs_ref, srs_ref,
+         kh_ref, kl_ref, meta_ref, lh_ref, ll_ref, lc_ref,
+         th_ref, tl_ref, tm_ref) = refs[1:16]
+        outs = refs[16:25]
+        acc_ref = None
+
+    skh = skh_ref[...]
+    skl = skl_ref[...]
+    smb = sm_ref[...] != 0
+    k = skh.shape[0]
+    # membership queries: masked-off lanes probe with the KEY_INF sentinel,
+    # the dispatch layer's `where(mask, keys, KEY_INF)` in u32 planes
+    mqh = jnp.where(smb, skh, _U32MAX)
+    mql = jnp.where(smb, skl, _U32MAX)
+
+    if has_spill:
+        c = pl.program_id(0)
+
+        @pl.when(c == 0)
+        def _zero_acc():
+            acc_ref[...] = jnp.zeros((k,), jnp.int32)
+
+        off = jnp.stack([off_ref[i] for i in range(max_runs + 1)])
+        hit = spill_chunk_probe(mqh, mql, sph_ref[...], spl_ref[...],
+                                spd_ref[...], off, c * chunk,
+                                max_runs=max_runs, chunk=chunk)
+        acc_ref[...] = acc_ref[...] | hit.astype(jnp.int32)
+
+    @pl.when(pl.program_id(0) == n_chunks - 1)
+    def _apply_prologue():
+        ss = ss_ref[...]
+        b = kh_ref.shape[1]
+        m = kh_ref.shape[0]
+
+        # membership compose + fall-through (the exec.tier_find contract)
+        hot_any, _ = bucket_probe(mqh, mql, ss, kh_ref[...], kl_ref[...])
+        f_hot = hot_any & smb
+        warm_found, _ = level_walk(mqh, mql, lh_ref[...], ll_ref[...],
+                                   lc_ref[...], th_ref[...], tl_ref[...],
+                                   tm_ref[...], levels=levels,
+                                   fanout=fanout)
+        f_warm = warm_found & smb
+        if has_spill:
+            f_sp = (acc_ref[...] != 0) & smb
+        else:
+            f_sp = jnp.zeros((k,), bool)
+        in_warm = f_warm & ~f_hot
+        in_spill = f_sp & ~f_hot & ~f_warm
+
+        # insert mask after membership: lanes resident below never try hot
+        sm_ins = smb & ~in_warm & ~in_spill
+        smi = sm_ins.astype(jnp.int32)
+
+        # in-batch duplicate: lane rank within its (slot, key) run — the
+        # `core.bits.dup_in_run` formula with host-precomputed run starts
+        krs = krs_ref[...]
+        c1 = jnp.cumsum(smi)
+        before_k = jnp.take(c1, krs, axis=0) - jnp.take(smi, krs, axis=0)
+        dup = sm_ins & ((c1 - smi - before_k) > 0)
+
+        # pre-batch bucket rows: one gather serves existence, the empty
+        # scan, and the victim metadata below
+        ssc = jnp.clip(ss, 0, m - 1)
+        rows_h = jnp.take(kh_ref[...], ssc, axis=0)
+        rows_l = jnp.take(kl_ref[...], ssc, axis=0)
+        hit_e = (rows_h == skh[:, None]) & (rows_l == skl[:, None])
+        ecol = jnp.argmax(hit_e, axis=1).astype(jnp.int32)
+        exists = sm_ins & jnp.any(hit_e, axis=1) & ~dup
+        cand = sm_ins & ~dup & ~exists
+
+        # within-slot candidate rank (`core.hashtable._seg_rank`)
+        srs = srs_ref[...]
+        ci = cand.astype(jnp.int32)
+        c2 = jnp.cumsum(ci)
+        before_s = jnp.where(
+            srs > 0, jnp.take(c2, jnp.maximum(srs - 1, 0), axis=0), 0)
+        rank = c2 - before_s - ci
+
+        # nth-empty placement column (`core.hashtable._nth_empty`)
+        empty = (rows_h == _U32MAX) & (rows_l == _U32MAX)
+        cum_e = jnp.cumsum(empty.astype(jnp.int32), axis=1)
+        hit_n = empty & (cum_e == rank[:, None] + 1)
+        fit_e = jnp.any(hit_n, axis=1)
+        col_e = jnp.where(fit_e,
+                          jnp.argmax(hit_n, axis=1).astype(jnp.int32), b)
+
+        if policy != "none":
+            # victim selection: counting rank over the policy score row
+            # (see module docstring) — no in-kernel argsort needed
+            metar = jnp.take(meta_ref[...], ssc, axis=0)
+            n_empty = jnp.sum(empty.astype(jnp.int32), axis=1)
+            ev_rank = rank - n_empty
+            score = metar if policy == "lru" else -metar
+            score = jnp.where(~empty, score, jnp.iinfo(jnp.int32).max)
+            tgt = jnp.clip(ev_rank, 0, b - 1)
+            iota_b = jax.lax.broadcasted_iota(jnp.int32, (k, b), 1)
+            vcol = jnp.zeros((k,), jnp.int32)
+            for j in range(b):
+                sj = score[:, j:j + 1]
+                less_j = (score < sj) | ((score == sj) & (iota_b < j))
+                pos_j = jnp.sum(less_j.astype(jnp.int32), axis=1)
+                vcol = jnp.where(pos_j == tgt, jnp.int32(j), vcol)
+            need_ev = cand & ~fit_e & (ev_rank < b - n_empty)
+            need_ev = need_ev & ((jnp.cumsum(need_ev.astype(jnp.int32)) - 1)
+                                 < me_ref[0])
+        else:
+            vcol = jnp.zeros((k,), jnp.int32)
+            need_ev = jnp.zeros((k,), bool)
+
+        placed = (cand & fit_e) | need_ev
+        col = jnp.where(fit_e, col_e, vcol)
+
+        outs[0][...] = in_warm.astype(jnp.int8)
+        outs[1][...] = in_spill.astype(jnp.int8)
+        outs[2][...] = placed.astype(jnp.int8)
+        outs[3][...] = exists.astype(jnp.int8)
+        outs[4][...] = dup.astype(jnp.int8)
+        outs[5][...] = need_ev.astype(jnp.int8)
+        outs[6][...] = col
+        outs[7][...] = vcol
+        outs[8][...] = ecol
+
+
+def tier_apply_tiles(sk_hi, sk_lo, slots, sm, krs, srs, key_hi, key_lo,
+                     meta, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo,
+                     term_mark, max_evict, sp_hi=None, sp_lo=None,
+                     sp_dead=None, run_off=None, *, policy: str,
+                     spill_chunk: int = 512, interpret: bool = True):
+    """sk_*: [K] u32 keys in sorted (slot, key) lane order; slots/krs/srs:
+    [K] i32 (slot per lane, key-run starts, slot-run starts); sm: [K] i8
+    insert mask; key_*/meta: [M, B]; lvl_*: [L, C1]; term_*: [C];
+    max_evict: [1] i32 (scalar-prefetched); sp_* [S] + run_off [R+1] i32
+    (scalar-prefetched) or None for a 2-tier stack. Returns the 9 outputs
+    listed in the module docstring."""
+    k = sk_hi.shape[0]
+    L, _ = lvl_hi.shape
+    has_spill = sp_hi is not None
+    tensors = [sk_hi, sk_lo, slots, sm, krs, srs, key_hi, key_lo, meta,
+               lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark]
+    whole = lambda a: pl.BlockSpec(a.shape, lambda g, *_: (0,) * a.ndim)
+    in_specs = [whole(a) for a in tensors]
+    scalars = [max_evict]
+    scratch = []
+    max_runs = 0
+    if has_spill:
+        s = sp_hi.shape[0]
+        chunk = min(spill_chunk, s)
+        # pad the spill planes to whole chunks; padded cells sit past every
+        # run boundary (off <= n <= S), so no window ever reaches them
+        pad = (-s) % chunk
+        if pad:
+            sp_hi = jnp.pad(sp_hi, (0, pad), constant_values=0xFFFFFFFF)
+            sp_lo = jnp.pad(sp_lo, (0, pad), constant_values=0xFFFFFFFF)
+            sp_dead = jnp.pad(sp_dead, (0, pad), constant_values=1)
+        n_chunks = (s + pad) // chunk
+        scalars = [run_off, max_evict]
+        tensors += [sp_hi, sp_lo, sp_dead]
+        cspec = pl.BlockSpec((chunk,), lambda g, *_: (g,))
+        in_specs += [cspec, cspec, cspec]
+        scratch = [pltpu.VMEM((k,), jnp.int32)]
+        max_runs = run_off.shape[0] - 1
+    else:
+        chunk = 0
+        n_chunks = 1
+
+    out_dtypes = [jnp.int8] * 6 + [jnp.int32] * 3
+    kernel = functools.partial(_ta_kernel, levels=L, fanout=4,
+                               policy=policy, has_spill=has_spill,
+                               max_runs=max_runs, chunk=chunk,
+                               n_chunks=n_chunks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=(n_chunks,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((k,), lambda g, *_: (0,))] * 9,
+        scratch_shapes=scratch)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((k,), d) for d in out_dtypes],
+        interpret=interpret,
+    )(*scalars, *tensors)

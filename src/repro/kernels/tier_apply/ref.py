@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the fused tier apply.
+
+Two pieces, both shared with the unfused write path so fused/unfused parity
+is by construction rather than by test luck:
+
+* `hot_insert_evict` — the policy-driven hot-tier insert (empties first,
+  then victims in policy order, eviction capped at the lower tiers' free
+  headroom). This IS the unfused path: `store.exec.hot_update` calls it
+  directly, and the fused kernel replicates its lane math (same
+  `core.hashtable.bucket_insert_plan` linearization, same victim ranking)
+  over the (hi, lo) u32 planes.
+* `tier_apply_ref` — the whole fused-apply prologue in jnp: lower-tier
+  membership via `kernels.tier_find.ref.tier_find_ref` with the SAME miss
+  fall-through masking as `store.exec.tier_find`, then the hot insert
+  under the policy. What `store.exec.tier_apply` runs in jnp mode.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+from repro.core.bits import EMPTY, KEY_INF
+from repro.core.layout import val_weight
+from repro.kernels.tier_find.ref import tier_find_ref
+
+
+def hot_insert_evict(hot: ht.FixedHash, meta, clock, keys, vals, mask,
+                     policy: str, max_evict):
+    """Insert-if-absent into the hot tier, evicting policy victims from
+    full buckets instead of refusing placement. Victims come from the
+    PRE-batch bucket contents (a key placed this batch is never its own
+    batch's victim); empties fill first, then victims in policy order, and
+    lanes beyond bucket width fall through (placed=False). At most
+    `max_evict` lanes evict: the caller passes the lower tiers' free
+    headroom, so a displaced victim ALWAYS has somewhere to land —
+    eviction must never turn into key loss. Lanes past the cap fall
+    through like any unplaced lane and report their own success honestly.
+    Returns (hot', meta', placed[K], existed[K], ev_key[K], ev_val[K],
+    ev_mask[K]) where lane i's ev_* carry the victim its placement
+    displaced."""
+    K = keys.shape[0]
+    M, B = hot.num_slots, hot.bucket
+    if mask is None:
+        mask = jnp.ones((K,), bool)
+    p = ht.bucket_insert_plan(hot, keys, vals, mask)  # the SHARED prologue
+    vrows = hot.vals[p.ss]
+    metar = meta[p.ss]
+
+    # victims: pre-batch entries ordered by the policy's evict-first score
+    # (lru: oldest stamp first; size: largest payload first; ties by column)
+    nonempty = p.rows != EMPTY
+    n_empty = jnp.sum(p.rows == EMPTY, axis=1).astype(jnp.int32)
+    ev_rank = p.rank - n_empty
+    score = metar if policy == "lru" else -metar
+    score = jnp.where(nonempty, score, jnp.iinfo(jnp.int32).max)
+    vorder = jnp.argsort(score, axis=1, stable=True)  # [K, B]
+    vcol = jnp.take_along_axis(
+        vorder, jnp.clip(ev_rank, 0, B - 1)[:, None], axis=1)[:, 0]
+    vcol = vcol.astype(jnp.int32)
+    need_ev = p.cand & ~p.fit_e & (ev_rank < jnp.sum(nonempty, axis=1))
+    need_ev = need_ev & (jnp.cumsum(need_ev.astype(jnp.int32)) - 1
+                         < max_evict)
+    ev_key = jnp.take_along_axis(p.rows, vcol[:, None], axis=1)[:, 0]
+    ev_val = jnp.take_along_axis(vrows, vcol[:, None], axis=1)[:, 0]
+
+    placed = (p.cand & p.fit_e) | need_ev
+    col = jnp.where(p.fit_e, p.col_e, vcol)
+    flat = jnp.where(placed, p.ss * B + col, M * B)
+    nk = hot.keys.reshape(-1).at[flat].set(p.sk, mode="drop").reshape(M, B)
+    nv = hot.vals.reshape(-1).at[flat].set(p.sv, mode="drop").reshape(M, B)
+    stamp = (jnp.broadcast_to(clock, (K,)).astype(jnp.int32)
+             if policy == "lru" else val_weight(p.sv))
+    nm = meta.reshape(-1).at[flat].set(stamp, mode="drop").reshape(M, B)
+    if policy == "lru":
+        # an INSERT that finds its key already hot-resident is a touch too:
+        # refresh that cell's stamp so upsert traffic keeps an entry warm
+        ecol = jnp.argmax(p.rows == p.sk[:, None], axis=1).astype(jnp.int32)
+        eflat = jnp.where(p.exists, p.ss * B + ecol, M * B)
+        nm = nm.reshape(-1).at[eflat].set(stamp, mode="drop").reshape(M, B)
+    hot2 = ht.FixedHash(keys=nk, vals=nv,
+                        count=hot.count
+                        + jnp.sum(p.cand & p.fit_e).astype(jnp.int64))
+    return (hot2, nm, placed[p.inv], (p.exists | p.dup)[p.inv],
+            ev_key[p.inv], ev_val[p.inv], need_ev[p.inv])
+
+
+def tier_apply_ref(hot, meta, clock, cold, spill, keys, vals, mask,
+                   policy: str, max_evict):
+    """The fused-apply prologue in jnp: lower-tier membership (with the
+    dispatch layer's fall-through masking) + the policy-driven hot insert.
+    Returns (hot', meta', in_warm[K], in_spill[K], ins[K], exists[K],
+    ev_key[K], ev_val[K], ev_mask[K]) — see `store.exec.tier_apply` for
+    the contract; `spill=None` (2-tier stacks) yields all-miss spill
+    lanes, `policy == "none"` all-miss eviction lanes."""
+    K = keys.shape[0]
+    if K == 0:    # degenerate plan: no lanes, state unchanged
+        z64 = jnp.zeros((0,), jnp.uint64)
+        zb = jnp.zeros((0,), bool)
+        return hot, meta, zb, zb, zb, zb, z64, z64, zb
+    qk = jnp.where(mask, keys, KEY_INF)
+    (f_hot, _, _), (f_warm, _), (f_sp, _) = tier_find_ref(hot, cold, spill,
+                                                          qk)
+    # the exec.tier_find fall-through contract, verbatim: a warm hit only
+    # counts on a hot miss, a spill hit only on a hot+warm miss
+    in_warm = f_warm & ~f_hot
+    in_spill = f_sp & ~f_hot & ~f_warm
+    try_hot = mask & ~in_warm & ~in_spill
+    if policy == "none":
+        hot2, ins, exists = ht.fixed_insert(hot, keys, vals, try_hot)
+        z64 = jnp.zeros((K,), jnp.uint64)
+        return (hot2, meta, in_warm, in_spill, ins, exists,
+                z64, z64, jnp.zeros((K,), bool))
+    (hot2, meta2, ins, exists, ev_k, ev_v, ev_m) = hot_insert_evict(
+        hot, meta, clock, keys, vals, try_hot, policy, max_evict)
+    return hot2, meta2, in_warm, in_spill, ins, exists, ev_k, ev_v, ev_m

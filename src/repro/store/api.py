@@ -123,7 +123,10 @@ class Store(Protocol):
     def scan(self, state: Any, lo: jnp.ndarray, hi: jnp.ndarray, max_out: int):
         """Batched range query over [lo, hi) rows. Returns
         (count[Q], keys[Q, max_out], vals[Q, max_out], valid[Q, max_out]).
-        Unordered backends raise NotImplementedError."""
+        Unordered backends raise NotImplementedError. Backends may accept
+        extra keyword options (the skiplist-terminal backends take
+        `as_of_batch=b` for a snapshot scan that excludes entries inserted
+        after batch clock b)."""
         ...
 
     def stats(self, state: Any) -> Dict[str, jnp.ndarray]:

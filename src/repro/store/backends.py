@@ -88,13 +88,17 @@ class DetSkiplistBackend:
         return dsl.skiplist_init(capacity)
 
     def apply(self, state, plan: OpPlan):
-        return apply_linearized(
+        state, res = apply_linearized(
             state, plan, dsl.insert_batch, dsl.delete_batch,
             lambda s, q: exec_.skiplist_find(s, q)[:2], KEY_INF,
             range_delete_fn=dsl.range_delete_batch)
+        # batch clock: entries inserted by apply #b carry stamp b, which is
+        # what scan(as_of_batch=b) snapshots against
+        return state._replace(clock=state.clock + 1), res
 
-    def scan(self, state, lo, hi, max_out: int):
-        return dsl.range_query(state, lo, hi, max_out)
+    def scan(self, state, lo, hi, max_out: int, as_of_batch=None):
+        return dsl.range_query(state, lo, hi, max_out,
+                               as_of_batch=as_of_batch)
 
     def stats(self, state):
         return uniform_stats(

@@ -38,13 +38,17 @@ into the jitted step via `exec_mode(...)`, so two engines with different
 modes coexist; flipping the module default after a step is traced does not
 retrace it.
 
-Every probe entry here counts as ONE dispatch (`dispatch_count()` /
-`measure_dispatches()`): the counter ticks when the probe is TRACED, which
-is exactly once per probe launch in the compiled step — the unit the fused
-tier find exists to minimize. Benchmarks and the fused-path tests read it
-to report dispatches per plan. Meters are CONTEXT-LOCAL and NESTABLE (see
-`measure_dispatches`); each probe dispatch also opens an `obs.span("find",
-probe=...)` so trace exports attribute lowering cost per probe.
+Every entry here counts as ONE dispatch (`dispatch_count()` /
+`measure_dispatches()`), split by kind: probes ("probe" — the read-only
+FIND/membership launches) and updates ("update" — the write-path launches:
+`hot_update`, the fused `tier_apply`). The counter ticks when the entry is
+TRACED, which is exactly once per launch in the compiled step — the unit
+the fused tier find/apply kernels exist to minimize. Benchmarks and the
+fused-path tests read it to report dispatches per plan, probe and update
+halves separately. Meters are CONTEXT-LOCAL and NESTABLE (see
+`measure_dispatches`); each dispatch also opens an `obs.span("find", ...)`
+or `obs.span("update", ...)` so trace exports attribute lowering cost per
+entry.
 """
 from __future__ import annotations
 
@@ -133,7 +137,14 @@ def runnable_modes() -> tuple:
 # dispatch accounting (context-local, nestable)
 # ---------------------------------------------------------------------------
 
+# dispatches split by KIND: "probe" (read-only FIND/membership launches)
+# and "update" (write-path launches: the hot-tier insert prologue, the
+# fused tier-apply). The split is what lets the fused-vs-unfused bench
+# rows report dispatches_per_apply for each half of an apply.
+DISPATCH_KINDS = ("probe", "update")
+
 _n_dispatch = 0
+_n_by_kind = {"probe": 0, "update": 0}
 
 # the active meter stack lives in a ContextVar, so meters are CONTEXT-LOCAL:
 # concurrent traces (threads, async tasks) each see only their own probes,
@@ -142,45 +153,71 @@ _n_dispatch = 0
 _METERS: ContextVar[tuple] = ContextVar("repro_exec_meters", default=())
 
 
-def _bump() -> None:
+def _bump(kind: str = "probe") -> None:
     global _n_dispatch
     _n_dispatch += 1
+    _n_by_kind[kind] += 1
     for meter in _METERS.get():
         meter._n += 1
+        if kind == "probe":
+            meter._probe += 1
+        else:
+            meter._update += 1
 
 
-def dispatch_count() -> int:
-    """Cumulative probe dispatches issued through this module in this
-    process (counted at trace time — one tick = one probe launch in the
-    traced step). Monotone; see `reset_dispatch_count` for the reset
+def dispatch_count(kind: str | None = None) -> int:
+    """Cumulative dispatches issued through this module in this process
+    (counted at trace time — one tick = one launch in the traced step).
+    `kind=None` returns the total; `"probe"` / `"update"` return one half
+    of the split (probe = FIND/membership launches, update = write-path
+    launches). Monotone; see `reset_dispatch_count` for the reset
     semantics. For scoped counts prefer `measure_dispatches`."""
-    return _n_dispatch
+    if kind is None:
+        return _n_dispatch
+    if kind not in DISPATCH_KINDS:
+        raise ValueError(f"unknown dispatch kind {kind!r}; "
+                         f"one of {DISPATCH_KINDS}")
+    return _n_by_kind[kind]
 
 
 def reset_dispatch_count() -> None:
-    """Zero the process-cumulative `dispatch_count()`. Reset semantics:
-    only the global total is affected — active `measure_dispatches` meters
-    count INCREMENTS (not offsets against the global), so a reset inside a
-    measured block neither corrupts nor rewinds any meter."""
+    """Zero the process-cumulative `dispatch_count()` (total and both
+    kinds). Reset semantics: only the global totals are affected — active
+    `measure_dispatches` meters count INCREMENTS (not offsets against the
+    global), so a reset inside a measured block neither corrupts nor
+    rewinds any meter."""
     global _n_dispatch
     _n_dispatch = 0
+    for k in DISPATCH_KINDS:
+        _n_by_kind[k] = 0
 
 
 class DispatchMeter:
     """Live dispatch counter for one `measure_dispatches` block. `n` is
-    valid DURING the block (live count so far) and after it (final count);
-    every probe traced in the block ticks this meter AND any enclosing
-    ones, so nested blocks see their own totals and outer blocks include
-    inner activity."""
+    valid DURING the block (live count so far) and after it (final count),
+    with the probe/update split exposed as `.probe` / `.update`
+    (`n == probe + update`); every dispatch traced in the block ticks this
+    meter AND any enclosing ones, so nested blocks see their own totals
+    and outer blocks include inner activity."""
 
-    __slots__ = ("_n",)
+    __slots__ = ("_n", "_probe", "_update")
 
     def __init__(self):
         self._n = 0
+        self._probe = 0
+        self._update = 0
 
     @property
     def n(self) -> int:
         return self._n
+
+    @property
+    def probe(self) -> int:
+        return self._probe
+
+    @property
+    def update(self) -> int:
+        return self._update
 
 
 @contextmanager
@@ -212,8 +249,23 @@ def _probe(fn):
 
     @functools.wraps(fn)
     def wrapped(*args, **kw):
-        _bump()
+        _bump("probe")
         with obs.span("find", cat="dispatch", probe=fn.__name__):
+            return fn(*args, **kw)
+    return wrapped
+
+
+def _update(fn):
+    """Write-path twin of `_probe`: one "update"-kind dispatch tick + one
+    `obs.span("update", probe=<name>)` per entry. Update dispatches are the
+    half of an apply the fused tier-apply kernel collapses; the split
+    counters are what the fused-vs-unfused bench rows report."""
+    from repro.store import obs
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        _bump("update")
+        with obs.span("update", cat="dispatch", probe=fn.__name__):
             return fn(*args, **kw)
     return wrapped
 
@@ -366,3 +418,60 @@ def tier_find(hot, cold, spill, queries, mode: str | None = None):
     return ((f_hot, v_hot, c_hot),
             (f_warm, jnp.where(f_warm, v_warm, jnp.uint64(0))),
             (f_sp, jnp.where(f_sp, v_sp, jnp.uint64(0))))
+
+
+# ---------------------------------------------------------------------------
+# update dispatches (the write half of an apply)
+# ---------------------------------------------------------------------------
+
+@_update
+def hot_update(hot, meta, clock, keys, vals, mask, policy, max_evict,
+               mode: str | None = None):
+    """Hot-tier insert prologue as ONE counted update dispatch — the
+    UNFUSED write path (membership probes already ran). jnp in every mode:
+    the sort/scatter prologue (`bucket_insert_plan` + victim selection) is
+    gather/scatter-bound with no kernel win of its own; the fused
+    `tier_apply` is the kernelized form. Returns
+    (hot', meta', ins[K], exists[K], ev_key[K], ev_val[K], ev_mask[K]);
+    for `policy == "none"` the eviction lanes are all-miss zeros and meta
+    passes through unchanged."""
+    _resolve(mode)
+    import jax.numpy as jnp
+    from repro.kernels.tier_apply.ref import hot_insert_evict
+    if policy == "none":
+        from repro.core import hashtable as ht
+        hot2, ins, exists = ht.fixed_insert(hot, keys, vals, mask)
+        k = keys.shape[0]
+        return (hot2, meta, ins, exists,
+                jnp.zeros((k,), jnp.uint64), jnp.zeros((k,), jnp.uint64),
+                jnp.zeros((k,), bool))
+    return hot_insert_evict(hot, meta, clock, keys, vals, mask,
+                            policy, max_evict)
+
+
+@_update
+def tier_apply(hot, meta, clock, cold, spill, keys, vals, mask, policy,
+               max_evict, mode: str | None = None):
+    """FUSED tier-stack APPLY prologue — membership probes + the hot-tier
+    insert plan + victim selection as ONE dispatch per plan
+    (`kernels.tier_apply`): the `tier_find` probe chain (bucket probe,
+    level walk, per-run spill search with the `run_offsets` plane
+    scalar-prefetched so spill chunks stream through VMEM), then the
+    sorted insert prologue (dup/exists/candidate lanes, nth-empty column,
+    eviction-rank victim selection off the policy metadata plane) inside
+    the same launch; the u64 scatters commit in the glue. Returns
+    (hot', meta', in_warm[K], in_spill[K], ins[K], exists[K],
+    ev_key[K], ev_val[K], ev_mask[K]) — `in_warm`/`in_spill` carry the
+    same fall-through masking as `tier_find`, so the caller's demote
+    routing sees identical lanes fused and unfused. `spill=None` (2-tier
+    stacks) yields all-miss spill lanes. Bit-identical to the unfused
+    probes + `hot_update` chain in every mode."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.kernels.tier_apply.ref import tier_apply_ref
+        return tier_apply_ref(hot, meta, clock, cold, spill, keys, vals,
+                              mask, policy, max_evict)
+    from repro.kernels.tier_apply.ops import tier_apply_fused
+    return tier_apply_fused(hot, meta, clock, cold, spill, keys, vals,
+                            mask, policy, max_evict,
+                            interpret=(m == "interpret"))

@@ -31,7 +31,8 @@ spans into a context-local `Tracer` (installed with `tracing()`), and
 always enters `jax.named_scope` so the same names annotate the lowered
 HLO/Pallas kernels for `jax.profiler` timelines. The span taxonomy
 (`SPAN_TAXONOMY`) covers the engine step ("route"/"step"), the exec
-dispatch layer ("find", with the probe name as an arg), the tier stack's
+dispatch layer ("find" for probe dispatches, "update" for state-writing
+dispatches, with the entry name as an arg), the tier stack's
 apply phases ("insert"/"delete"/"demote"/"promote"/"compact"/"flush"), and
 the serving engine's host loop ("admit"/"prefill"/"decode"). Spans around
 TRACED code measure trace/lowering time (they fire once per compilation);
@@ -88,8 +89,8 @@ SERVING_SCHEMA = ("ring_depth", "prefix_hits", "prefix_lookups",
 # span names (docs/observability.md lists what each phase wraps); `span`
 # accepts any name, but the instrumented modules stick to this taxonomy so
 # traces from different runs line up in Perfetto
-SPAN_TAXONOMY = ("route", "step", "find", "insert", "delete", "pop",
-                 "demote", "promote", "compact", "flush", "scan",
+SPAN_TAXONOMY = ("route", "step", "find", "update", "insert", "delete",
+                 "pop", "demote", "promote", "compact", "flush", "scan",
                  "admit", "prefill", "decode")
 
 # bytes one routed op carries through the engine's all_to_all queues:
@@ -232,9 +233,11 @@ class ObservedStore:
                               metrics=merge_metrics(state.metrics, frame)),
                 res)
 
-    def scan(self, state: ObservedState, lo, hi, max_out: int):
+    def scan(self, state: ObservedState, lo, hi, max_out: int, **kw):
+        # **kw forwards backend-specific scan options (e.g. the ordered
+        # skiplist backends' snapshot `as_of_batch=`) untouched
         with span("scan", backend=self.inner.name):
-            return self.inner.scan(state.inner, lo, hi, max_out)
+            return self.inner.scan(state.inner, lo, hi, max_out, **kw)
 
     def stats(self, state: ObservedState):
         return self.inner.stats(state.inner)

@@ -100,10 +100,13 @@ class PQSkiplistBackend:
                         vals=jnp.where(is_pop & valid, pres, res.vals))
         n_pops = state.n_pops + jnp.sum(popped).astype(jnp.int64)
         n_empty = state.n_pop_empty + jnp.sum(pop_m & ~popped).astype(jnp.int64)
-        return PQState(heap=heap, n_pops=n_pops, n_pop_empty=n_empty), res
+        heap = heap._replace(clock=heap.clock + 1)   # same batch clock as
+        return PQState(heap=heap, n_pops=n_pops,     # det_skiplist.scan
+                       n_pop_empty=n_empty), res
 
-    def scan(self, state: PQState, lo, hi, max_out: int):
-        return dsl.range_query(state.heap, lo, hi, max_out)
+    def scan(self, state: PQState, lo, hi, max_out: int, as_of_batch=None):
+        return dsl.range_query(state.heap, lo, hi, max_out,
+                               as_of_batch=as_of_batch)
 
     def stats(self, state: PQState):
         return uniform_stats(

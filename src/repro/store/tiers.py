@@ -107,8 +107,9 @@ import jax.numpy as jnp
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
 from repro.core.bits import EMPTY, KEY_INF, dup_in_run
-from repro.core.layout import (MAX_SPILL_RUNS, hash_slot, policy_arrays,
-                               spill_arrays, val_weight)
+from repro.core.layout import (SpillLayout, hash_slot, policy_arrays,
+                               spill_arrays)
+from repro.kernels.tier_apply.ref import hot_insert_evict
 from repro.kernels.tier_find.ref import spill_find_runs, spill_run_cells
 from repro.store import exec as exec_
 from repro.store import obs
@@ -220,17 +221,22 @@ def spill_discard(sp: SpillTier, keys, mask):
 
 def spill_maintain(sp: SpillTier) -> SpillTier:
     """Run-merging maintenance, applied at the end of every `apply`/`flush`
-    that carries a spill tier. Compacts when tombstones pass 1/4 of the
-    appended total (the churn rule) OR when the live run count could
-    exceed `core.layout.MAX_SPILL_RUNS` next batch (an apply appends at
-    most 3 runs: eviction demotes, insert overflow, promotion demotes).
+    that carries a spill tier. Compacts when tombstones pass
+    1/`SpillLayout.COMPACT_DEAD_FRAC` of the appended total (the churn
+    rule) OR when the live run count could exceed `SpillLayout.MAX_RUNS`
+    next batch (one apply appends at most `SpillLayout.RUNS_PER_APPLY`
+    runs: eviction demotes, insert overflow, promotion demotes). The
+    thresholds live on `core.layout.SpillLayout` — the SAME class the
+    probe kernels size their boundary plane from — so the compaction
+    policy and the layout's static-shape assumptions cannot drift apart.
     The second trigger is what makes the run cap an INVARIANT — and the
     cap is what gives the per-run probe (jnp and the fused kernel alike)
     a static run-boundary plane to binary-search."""
-    churn = sp.n_dead * 4 > sp.n
+    churn = sp.n_dead * SpillLayout.COMPACT_DEAD_FRAC > sp.n
     runs = jnp.sum(sp.run_start.astype(jnp.int32))
-    return jax.lax.cond(churn | (runs + 3 > MAX_SPILL_RUNS), spill_compact,
-                        lambda s: s, sp)
+    return jax.lax.cond(
+        churn | (runs + SpillLayout.RUNS_PER_APPLY > SpillLayout.MAX_RUNS),
+        spill_compact, lambda s: s, sp)
 
 
 def _pin_spill_host(sp: SpillTier) -> SpillTier:
@@ -262,64 +268,10 @@ class TierState(NamedTuple):
     spill: Optional[SpillTier]  # cold spill runs; None on 2-tier stacks
 
 
-def _hot_insert_evict(hot: ht.FixedHash, meta, clock, keys, vals, mask,
-                      policy: str, max_evict):
-    """Insert-if-absent into the hot tier, evicting policy victims from
-    full buckets instead of refusing placement. Victims come from the
-    PRE-batch bucket contents (a key placed this batch is never its own
-    batch's victim); empties fill first, then victims in policy order, and
-    lanes beyond bucket width fall through (placed=False). At most
-    `max_evict` lanes evict: the caller passes the lower tiers' free
-    headroom, so a displaced victim ALWAYS has somewhere to land —
-    eviction must never turn into key loss. Lanes past the cap fall
-    through like any unplaced lane and report their own success honestly.
-    Returns (hot', meta', placed[K], existed[K], ev_key[K], ev_val[K],
-    ev_mask[K]) where lane i's ev_* carry the victim its placement
-    displaced."""
-    K = keys.shape[0]
-    M, B = hot.num_slots, hot.bucket
-    if mask is None:
-        mask = jnp.ones((K,), bool)
-    p = ht.bucket_insert_plan(hot, keys, vals, mask)  # the SHARED prologue
-    vrows = hot.vals[p.ss]
-    metar = meta[p.ss]
-
-    # victims: pre-batch entries ordered by the policy's evict-first score
-    # (lru: oldest stamp first; size: largest payload first; ties by column)
-    nonempty = p.rows != EMPTY
-    n_empty = jnp.sum(p.rows == EMPTY, axis=1).astype(jnp.int32)
-    ev_rank = p.rank - n_empty
-    score = metar if policy == "lru" else -metar
-    score = jnp.where(nonempty, score, jnp.iinfo(jnp.int32).max)
-    vorder = jnp.argsort(score, axis=1, stable=True)  # [K, B]
-    vcol = jnp.take_along_axis(
-        vorder, jnp.clip(ev_rank, 0, B - 1)[:, None], axis=1)[:, 0]
-    vcol = vcol.astype(jnp.int32)
-    need_ev = p.cand & ~p.fit_e & (ev_rank < jnp.sum(nonempty, axis=1))
-    need_ev = need_ev & (jnp.cumsum(need_ev.astype(jnp.int32)) - 1
-                         < max_evict)
-    ev_key = jnp.take_along_axis(p.rows, vcol[:, None], axis=1)[:, 0]
-    ev_val = jnp.take_along_axis(vrows, vcol[:, None], axis=1)[:, 0]
-
-    placed = (p.cand & p.fit_e) | need_ev
-    col = jnp.where(p.fit_e, p.col_e, vcol)
-    flat = jnp.where(placed, p.ss * B + col, M * B)
-    nk = hot.keys.reshape(-1).at[flat].set(p.sk, mode="drop").reshape(M, B)
-    nv = hot.vals.reshape(-1).at[flat].set(p.sv, mode="drop").reshape(M, B)
-    stamp = (jnp.broadcast_to(clock, (K,)).astype(jnp.int32)
-             if policy == "lru" else val_weight(p.sv))
-    nm = meta.reshape(-1).at[flat].set(stamp, mode="drop").reshape(M, B)
-    if policy == "lru":
-        # an INSERT that finds its key already hot-resident is a touch too:
-        # refresh that cell's stamp so upsert traffic keeps an entry warm
-        ecol = jnp.argmax(p.rows == p.sk[:, None], axis=1).astype(jnp.int32)
-        eflat = jnp.where(p.exists, p.ss * B + ecol, M * B)
-        nm = nm.reshape(-1).at[eflat].set(stamp, mode="drop").reshape(M, B)
-    hot2 = ht.FixedHash(keys=nk, vals=nv,
-                        count=hot.count
-                        + jnp.sum(p.cand & p.fit_e).astype(jnp.int64))
-    return (hot2, nm, placed[p.inv], (p.exists | p.dup)[p.inv],
-            ev_key[p.inv], ev_val[p.inv], need_ev[p.inv])
+# The policy-driven hot insert (`hot_insert_evict`, formerly defined here)
+# moved to `kernels.tier_apply.ref` so the fused apply kernel, the unfused
+# `store.exec.hot_update` dispatch, and the promotion path below all share
+# ONE implementation of the victim-selection lane math.
 
 
 class TieredBackend:
@@ -416,30 +368,30 @@ class TieredBackend:
 
         # INSERTS: insert-if-absent across ALL tiers; lanes absent
         # everywhere try hot first (under the policy), the rest fall down.
-        # Fused: the lower-tier membership probe is ONE tier_find dispatch
-        # (hot results unused — the insert path learns hot residency from
-        # its own bucket prologue); unfused: one dispatch per lower tier.
+        # Fused: membership + the whole hot-insert prologue (bucket plan,
+        # victim selection) is ONE tier_apply dispatch per plan; unfused:
+        # one probe dispatch per lower tier, then one hot_update dispatch.
         with obs.span("insert", backend=self.name):
             ins_k = jnp.where(ins_m, keys, KEY_INF)
             self._record_probe_cost(cold, spill, ins_k)
             if self.fused:
-                _, (in_cold, _), (in_spill, _) = exec_.tier_find(
-                    hot, cold, spill, ins_k)
+                (hot, meta, in_cold, in_spill, ins_hot, ex_hot,
+                 ev_k, ev_v, ev_m) = exec_.tier_apply(
+                    hot, meta, clock, cold, spill, keys, vals, ins_m,
+                    self.policy, self._headroom(cold, spill))
+                try_hot = ins_m & ~in_cold & ~in_spill
             else:
                 in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
                 if spill is not None:
                     in_spill, _ = exec_.spill_find(spill, ins_k)
                 else:
                     in_spill = jnp.zeros((K,), bool)
-            try_hot = ins_m & ~in_cold & ~in_spill
-            if self.policy == "none":
-                hot, ins_hot, ex_hot = ht.fixed_insert(hot, keys, vals,
-                                                       try_hot)
-            else:
+                try_hot = ins_m & ~in_cold & ~in_spill
                 (hot, meta, ins_hot, ex_hot,
-                 ev_k, ev_v, ev_m) = _hot_insert_evict(
+                 ev_k, ev_v, ev_m) = exec_.hot_update(
                     hot, meta, clock, keys, vals, try_hot, self.policy,
                     self._headroom(cold, spill))
+            if self.policy != "none":
                 n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)
                 obs.record("evictions", lambda: jnp.sum(ev_m))
                 # victims demote first — the eviction cap guarantees they
@@ -512,7 +464,7 @@ class TieredBackend:
                     hot, prom_ok, _ = ht.fixed_insert(hot, keys, pv, prom)
                 else:
                     (hot, meta, prom_ok, _,
-                     ev_k, ev_v, ev_m) = _hot_insert_evict(
+                     ev_k, ev_v, ev_m) = hot_insert_evict(
                         hot, meta, clock, keys, pv, prom, self.policy,
                         self._headroom(cold, spill))
                     n_evict = n_evict + jnp.sum(ev_m).astype(jnp.int64)

@@ -274,6 +274,83 @@ def check_fused_vs_unfused(mesh, name: str = "tiered3/lru") -> None:
     print(f"FUSED-OK backend={name} shards={N_SHARDS} modes=jnp,interpret")
 
 
+def check_fused_apply(mesh, name: str = "tiered3/lru") -> None:
+    """APPLY-OK: the fused-apply budget and its eviction math survive the
+    mesh. (a) Tracing one 8-device engine step over the fused tier backend
+    records exactly TWO exec dispatches — one `tier_apply` update plus one
+    `tier_find` probe — while the unfused twin records the
+    dispatch-per-tier chain (2*n_tiers total, 2*n_tiers-1 probes);
+    shard_map traces the shard body once, so the per-shard budget is
+    visible at trace time. (b) An INSERT-heavy stream over a deliberately
+    tiny hot tier forces the policy's victim selection and demote scatter
+    through the fused kernel on every shard; the fused engine and its
+    `fused=False` twin must stay bit-identical in results AND full sharded
+    residency, in both exec modes, with evictions actually recorded."""
+    from repro.store import exec as exec_
+    from repro.store.tiers import unfused_twin
+
+    total = N_SHARDS * LANES
+    init_kw = dict(hot_bucket=2, hot_frac=8)      # tiny hot tier: 8 slots
+    unfused = unfused_twin(name)
+    n_tiers = 3
+
+    # (a) trace-time dispatch budget of the sharded step, per variant
+    budgets = {name: (2, 1, 1),
+               unfused: (2 * n_tiers, 2 * n_tiers - 1, 1)}
+    for backend, (n, npr, nup) in budgets.items():
+        eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=8,
+                          exec_mode="jnp")
+        state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+        put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+        args = (state, put(np.full(total, OP_INSERT, np.int32)),
+                put(np.arange(1, total + 1, dtype=np.uint64)),
+                put(np.arange(2, total + 2, dtype=np.uint64)))
+        with exec_.measure_dispatches() as m:
+            jax.eval_shape(eng._jit_step, *args)
+        assert (m.n, m.probe, m.update) == (n, npr, nup), \
+            (backend, m.n, m.probe, m.update)
+
+    # (b) eviction-heavy fused-vs-unfused bit-identity under sharding
+    rng = np.random.default_rng(101)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 64, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(ROUNDS):
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)
+        rounds.append((np.full(total, OP_INSERT, np.int32), keys))
+
+    for mode in ("jnp", "interpret"):
+        states, results, evs = [], [], []
+        for backend in (name, unfused):
+            eng = StoreEngine(mesh, AXES, LANES, backend=backend,
+                              pool_factor=8, exec_mode=mode)
+            state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+            put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+            outs = []
+            for ops, keys in rounds:
+                state, res, ok, dropped = eng.step(state, put(ops),
+                                                   put(keys), put(keys + 3))
+                assert int(dropped) == 0, mode
+                outs.append((np.asarray(ok), np.asarray(res)))
+            states.append(state)
+            results.append(outs)
+            evs.append(int(eng.stats(state)["evictions"].sum()))
+        assert evs[0] > 0 and evs[0] == evs[1], (mode, evs)
+        for rnd, ((ok_f, v_f), (ok_u, v_u)) in enumerate(zip(*results)):
+            assert (ok_f == ok_u).all(), (mode, rnd)
+            assert (v_f == v_u).all(), (mode, rnd)
+        la, lb = jax.tree.leaves(states[0]), jax.tree.leaves(states[1])
+        assert len(la) == len(lb)
+        for i, (a, b) in enumerate(zip(la, lb)):
+            assert (np.asarray(a) == np.asarray(b)).all(), (mode, i)
+    print(f"APPLY-OK backend={name} shards={N_SHARDS} "
+          f"evictions={evs[0]} modes=jnp,interpret")
+
+
 def check_metrics(mesh, backend: str = "obs:tiered3/lru") -> None:
     """METRICS-OK: the observability plane under sharding. Each shard of an
     `obs:`-wrapped engine carries its own metrics counters (on dim 0, like
@@ -433,6 +510,7 @@ def main() -> int:
     check_uneven_occupancy(mesh)
     check_tier_residency(mesh)
     check_fused_vs_unfused(mesh)
+    check_fused_apply(mesh)
     check_metrics(mesh)
     check_pq(mesh)
     return 0

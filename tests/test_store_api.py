@@ -177,6 +177,60 @@ def test_ordered_backends_scan_parity():
     assert ref[1][0] == [len(ks), 30]
 
 
+@pytest.mark.parametrize("name", ["det_skiplist", "pq"])
+def test_snapshot_scan_as_of_batch(name):
+    """scan(as_of_batch=b) sees exactly the entries inserted by applies
+    0..b: later batches are invisible, and the exact count plane agrees
+    with the valid plane. Apply #i stamps its inserts with clock i."""
+    be = get_backend(name)
+    st = be.init(256)
+    batches = [u64([10, 20]), u64([30, 40]), u64([50, 60])]
+    for ks in batches:
+        st, res = be.apply(st, make_plan(
+            np.full(2, OP_INSERT, np.int32), ks, ks + 1))
+        assert res.ok.all()
+    lo, hi = u64([0]), u64([2**63])
+    for b in range(3):
+        cnt, keys, vals, valid = be.scan(st, lo, hi, 16, as_of_batch=b)
+        seen = sorted(int(k) for k, m in
+                      zip(np.asarray(keys[0]), np.asarray(valid[0])) if m)
+        want = sorted(int(k) for ks in batches[:b + 1] for k in np.asarray(ks))
+        assert seen == want, b
+        assert int(cnt[0]) == 2 * (b + 1)
+    # no as_of: the plain full scan, unchanged
+    cnt, _, _, valid = be.scan(st, lo, hi, 16)
+    assert int(cnt[0]) == 6 == int(np.asarray(valid[0]).sum())
+
+
+def test_snapshot_scan_is_a_filter_not_time_travel():
+    """Deleting an entry hides it from EVERY as_of (tombstones still
+    apply), and re-inserting it re-stamps: the revived entry belongs to
+    the reviving batch, not the original one."""
+    be = get_backend("det_skiplist")
+    st = be.init(256)
+    ks = u64([10, 20, 30])
+    st, _ = be.apply(st, make_plan(np.full(3, OP_INSERT, np.int32), ks, ks))
+    st, res = be.apply(st, make_plan(
+        np.array([OP_DELETE], np.int32), u64([20])))          # batch 1
+    assert bool(res.ok[0])
+    lo, hi = u64([0]), u64([2**63])
+    for b in range(2):
+        _, keys, _, valid = be.scan(st, lo, hi, 8, as_of_batch=b)
+        seen = {int(k) for k, m in
+                zip(np.asarray(keys[0]), np.asarray(valid[0])) if m}
+        assert seen == {10, 30}, b                 # 20 gone at every as_of
+    st, _ = be.apply(st, make_plan(
+        np.array([OP_INSERT], np.int32), u64([20]), u64([99])))  # batch 2
+    _, keys, _, valid = be.scan(st, lo, hi, 8, as_of_batch=1)
+    seen = {int(k) for k, m in
+            zip(np.asarray(keys[0]), np.asarray(valid[0])) if m}
+    assert seen == {10, 30}                        # revival stamped batch 2
+    cnt, keys, _, valid = be.scan(st, lo, hi, 8, as_of_batch=2)
+    seen = {int(k) for k, m in
+            zip(np.asarray(keys[0]), np.asarray(valid[0])) if m}
+    assert seen == {10, 20, 30} and int(cnt[0]) == 3
+
+
 def test_unordered_backends_refuse_scan():
     for name in ALL_BACKENDS:
         be = get_backend(name)

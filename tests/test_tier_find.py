@@ -247,27 +247,30 @@ def test_fused_residency_bit_identical_across_modes(name):
 def test_fused_find_is_one_dispatch():
     """The acceptance criterion, measured: in fused mode the FIND chain is
     ONE exec dispatch per plan regardless of tier depth (the unfused chain
-    pays one per tier), and a whole fused apply traces 2 probe dispatches
-    (insert-phase membership + FIND phase) against the unfused 5."""
+    pays one per tier), and a whole fused apply traces 2 dispatches total
+    (ONE tier_apply update + ONE FIND-phase probe) against the unfused 6
+    (2 insert probes + 1 hot_update + 3 FIND probes)."""
     _, st, _ = _loaded_state("tiered3")
     q = jnp.asarray(np.arange(1, 33, dtype=np.uint64))
     with exec_.measure_dispatches() as m_f:
         exec_.tier_find(st.hot, st.cold, st.spill, q)
-    assert m_f.n == 1
+    assert (m_f.n, m_f.probe, m_f.update) == (1, 1, 0)
     with exec_.measure_dispatches() as m_u:
         exec_.hash_find_cols(st.hot, q)
         exec_.skiplist_find(st.cold, q)
         exec_.spill_find(st.spill, q)
-    assert m_u.n == 3
+    assert (m_u.n, m_u.probe, m_u.update) == (3, 3, 0)
 
     plan = make_plan(np.full(32, OP_FIND, np.int32), np.asarray(q))
     fused, unf = get_backend("tiered3"), unfused_twin("tiered3")
     with exec_.measure_dispatches() as m_f:
         jax.make_jaxpr(fused.apply)(st, plan)
-    assert m_f.n == 2, "fused apply: insert-phase probe + FIND phase"
+    assert (m_f.n, m_f.probe, m_f.update) == (2, 1, 1), \
+        "fused apply: ONE tier_apply update + ONE FIND-phase probe"
     with exec_.measure_dispatches() as m_u:
         jax.make_jaxpr(unf.apply)(st, plan)
-    assert m_u.n == 5, "unfused apply: 2 insert-phase + 3 FIND-phase"
+    assert (m_u.n, m_u.probe, m_u.update) == (6, 5, 1), \
+        "unfused apply: 2 insert probes + hot_update + 3 FIND probes"
 
 
 def test_tier_find_empty_batch_all_modes():

@@ -18,10 +18,14 @@ Regression-gate mode (the CI smoke gate over the tier-churn rows):
     python tools/bench_diff.py --assert-within 50 base.json new.json
 
 exits nonzero when ANY shared row's ``us_per_call`` regresses (B slower
-than A) by more than the threshold percentage. Improvements and missing
-rows never fail the gate — it bounds regressions, it does not require
-progress. The mode refuses to gate across mismatched measurement
-metadata (exit 2), since cross-protocol deltas are noise.
+than A) by more than the threshold percentage. Rows that carry a measured
+``dispatches_per_apply`` are additionally gated EXACTLY: dispatch counts
+are a compile-time structural property, not a noisy timing, so any growth
+at all fails (the fused tier apply's ≤2-dispatch contract rides on this).
+Improvements and missing rows never fail the gate — it bounds
+regressions, it does not require progress. The mode refuses to gate
+across mismatched measurement metadata (exit 2), since cross-protocol
+deltas are noise.
 """
 from __future__ import annotations
 
@@ -78,7 +82,13 @@ def main(argv: list[str]) -> int:
         delta = (ub - ua) / ua * 100 if ua else float("inf")
         print(f"{n:<{width}}  {ua:>10.2f}  {ub:>10.2f}  {delta:>+7.1f}%")
         if args.assert_within is not None and delta > args.assert_within:
-            regressions.append((n, delta))
+            regressions.append((n, f"{delta:+.1f}%"))
+        da = rows_a[n].get("dispatches_per_apply")
+        db = rows_b[n].get("dispatches_per_apply")
+        if args.assert_within is not None and da is not None \
+                and db is not None and db > da:
+            regressions.append(
+                (n, f"dispatches_per_apply {da} -> {db}"))
     for only, rows, path in ((set(rows_a) - set(rows_b), rows_a, args.a),
                              (set(rows_b) - set(rows_a), rows_b, args.b)):
         for n in sorted(only):
@@ -89,8 +99,8 @@ def main(argv: list[str]) -> int:
         if regressions:
             print(f"\nFAIL: {len(regressions)} row(s) regressed beyond "
                   f"{args.assert_within:g}%:", file=sys.stderr)
-            for n, delta in regressions:
-                print(f"  {n}: {delta:+.1f}%", file=sys.stderr)
+            for n, what in regressions:
+                print(f"  {n}: {what}", file=sys.stderr)
             return 1
         print(f"\nOK: no shared row regressed beyond "
               f"{args.assert_within:g}% ({len(shared)} rows gated)")
