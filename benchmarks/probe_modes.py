@@ -27,6 +27,7 @@ from benchmarks.common import (Recorder, bench_times, finish, keys64,
                                percentiles)
 from repro.core import det_skiplist as dsl
 from repro.core import hashtable as ht
+from repro.core.layout import bskip_num_levels
 from repro.store import get_backend, make_plan
 from repro.store import exec as exec_
 from repro.store.api import OP_INSERT
@@ -59,13 +60,30 @@ def run(out_dir: str | None = None):
     s, _, _ = dsl.insert_batch(s, base, base)
     queries = keys64(rng, QUERIES // 2)
     queries = jax.numpy.concatenate([base[: QUERIES // 2], queries])
+    lvl_steps = int(s.num_levels) + 1
     for mode in modes:
         fn = jax.jit(lambda st, q, m=mode: exec_.skiplist_find(st, q, m)[0])
         ts = bench_times(lambda: fn(s, queries))
         t = float(np.median(ts))
         rec.record(f"probe/skiplist_find/mode={mode}", t / QUERIES,
                    ops_per_sec=QUERIES / t, queries=QUERIES,
-                   preload=PRELOAD, mode=mode,
+                   preload=PRELOAD, mode=mode, warm_layout="level",
+                   steps_per_probe=lvl_steps,
+                   **{k: v / QUERIES for k, v in percentiles(ts).items()})
+
+    # the block-major B-skiplist walk on the SAME state: one lane-width
+    # fat-node compare per level, so the descent is ceil(log128(blocks))+1
+    # block steps vs num_levels+1 fan-out-4 cell steps (the row pair shows
+    # the measured steps-per-probe reduction, 2 vs 12 at CAP = 8Ki)
+    blk_steps = bskip_num_levels(CAP) + 1
+    for mode in modes:
+        fn = jax.jit(lambda st, q, m=mode: exec_.bskiplist_find(st, q, m)[0])
+        ts = bench_times(lambda: fn(s, queries))
+        t = float(np.median(ts))
+        rec.record(f"probe/bskiplist_find/mode={mode}", t / QUERIES,
+                   ops_per_sec=QUERIES / t, queries=QUERIES,
+                   preload=PRELOAD, mode=mode, warm_layout="block",
+                   steps_per_probe=blk_steps, level_steps_per_probe=lvl_steps,
                    **{k: v / QUERIES for k, v in percentiles(ts).items()})
 
     # fixed-slot hash: half the queries hit, half miss
@@ -108,8 +126,21 @@ def run(out_dir: str | None = None):
         rec.record(f"probe/tier_find/fused/mode={mode}", t_f / QUERIES,
                    ops_per_sec=QUERIES / t_f, queries=QUERIES,
                    preload=TIER_PRELOAD, mode=mode, fused="yes",
-                   dispatches_per_plan=md.n,
+                   warm_layout="level", dispatches_per_plan=md.n,
                    **{k: v / QUERIES for k, v in percentiles(ts_f).items()})
+        with exec_.measure_dispatches() as md:
+            fused_b = jax.jit(lambda h_, c_, s_, q, m=mode:
+                              exec_.tier_find(h_, c_, s_, q, m,
+                                              warm_layout="block"))
+            ts_b = bench_times(lambda: fused_b(hot, cold, spill, tq))
+            t_b = float(np.median(ts_b))
+        rec.record(f"probe/tier_find/fused/b128/mode={mode}", t_b / QUERIES,
+                   ops_per_sec=QUERIES / t_b, queries=QUERIES,
+                   preload=TIER_PRELOAD, mode=mode, fused="yes",
+                   warm_layout="block", dispatches_per_plan=md.n,
+                   warm_steps=bskip_num_levels(TIER_CAP) + 1,
+                   warm_level_steps=int(cold.num_levels) + 1,
+                   **{k: v / QUERIES for k, v in percentiles(ts_b).items()})
         with exec_.measure_dispatches() as md:
             unf = jax.jit(lambda h_, c_, s_, q, m=mode:
                           _unfused_chain(h_, c_, s_, q, m))

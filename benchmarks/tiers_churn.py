@@ -54,9 +54,10 @@ ROUNDS = 4           # preload batches
 # preload: the flat skiplist gets one big array, the 2-tier stack a bigger
 # warm tier, the 3-tier stacks overflow into their spill runs by design
 BACKENDS = {"det_skiplist": 1088, "hash+skiplist": 1024, "tiered3": CAP,
-            "tiered3/lru": CAP, "tiered3/size": CAP}
+            "tiered3/lru": CAP, "tiered3/size": CAP, "tiered3/b128": CAP}
 # tier stacks also run as unfused twins (same semantics, dispatch per tier)
-TIERED = ("hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size")
+TIERED = ("hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size",
+          "tiered3/b128")
 
 
 def _streams(rng):
@@ -116,6 +117,8 @@ def run(out_dir: str | None = None):
                        preload=PRELOAD, backend=name, mode=mode,
                        fused=("no" if tag == "/unfused" else
                               "yes" if name in TIERED else "flat"),
+                       warm_layout=("block" if name.endswith("/b128")
+                                    else "level"),
                        observed=("yes" if tag == "/obs" else "no"),
                        dispatches_per_apply=dispatches,
                        probe_dispatches_per_apply=d_probe,

@@ -167,6 +167,44 @@ def find_batch(s: DetSkiplist, queries: jnp.ndarray):
     return found, jnp.where(found, s.term_vals[i], jnp.uint64(0)), i
 
 
+def find_batch_blocked(s: DetSkiplist, queries: jnp.ndarray,
+                       block: int | None = None):
+    """Batched Find through the block-major B-skiplist view — same contract
+    (and bit-identical found/vals) as `find_batch`, with the descent
+    restructured into lane-width fat nodes: each step compares a WHOLE
+    block of `block` sorted keys (one vector compare + sum-reduction = the
+    searchsorted-left position) instead of a fan-out-4 gather, so the walk
+    is `ceil(log_block(C/block)) + 1` steps instead of `num_levels + 1`.
+    The blocked index is derived from the terminal level at probe time
+    (`core.layout.bskiplist_layout`) exactly like `_rebuild_levels` derives
+    the level-major index — the layout is a probe-execution knob, state
+    never changes shape. Kernel twin: `repro.kernels.bskiplist_walk`.
+    """
+    from repro.core.layout import BSKIP_BLOCK, bskiplist_layout, key_lt, split_u64
+
+    B = BSKIP_BLOCK if block is None else block
+    lay = bskiplist_layout(s, B)
+    qh, ql = split_u64(queries)
+    L, W = lay.blk_hi.shape
+    nb = lay.term_hi.shape[0] // B
+    lanes = jnp.arange(B, dtype=jnp.int32)[None, :]
+    i = jnp.zeros(queries.shape, jnp.int32)          # root: node 0, row L-1
+    for r in range(L - 1, -1, -1):
+        base = jnp.clip(i, 0, W // B - 1) * B
+        idx = base[:, None] + lanes
+        lt = key_lt(lay.blk_hi[r][idx], lay.blk_lo[r][idx],
+                    qh[:, None], ql[:, None])
+        sel = jnp.sum(lt, axis=1).astype(jnp.int32)  # searchsorted-left
+        i = base + sel                               # child node / block id
+    blk = jnp.clip(i, 0, nb - 1)
+    idx = blk[:, None] * B + lanes
+    lt = key_lt(lay.term_hi[idx], lay.term_lo[idx], qh[:, None], ql[:, None])
+    sel = jnp.sum(lt, axis=1).astype(jnp.int32)
+    i = jnp.clip(blk * B + sel, 0, s.capacity - 1)
+    found = (s.term_keys[i] == queries) & ~s.term_mark[i] & (queries != KEY_INF)
+    return found, jnp.where(found, s.term_vals[i], jnp.uint64(0)), i
+
+
 def contains(s: DetSkiplist, key) -> jnp.ndarray:
     return find_batch(s, jnp.asarray([key], jnp.uint64))[0][0]
 

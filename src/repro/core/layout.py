@@ -22,6 +22,17 @@ Conventions:
   level as flat `[C]` planes + int8 marks. Whole-array BlockSpecs make the
   entire index VMEM-resident: the CPU path through HBM pointer-land becomes
   L on-chip hops.
+* **Block-major B-skiplist layout** — the SAME deterministic skiplist,
+  re-viewed as lane-width fat nodes: the sorted terminal level is cut into
+  blocks of `BSKIP_BLOCK` = 128 keys (one VPU register tile) and every
+  index level holds nodes of 128 child maxima, so a walk compares a WHOLE
+  block per step (one `key_lt` vector compare + sum-reduction = the
+  searchsorted-left position) instead of touching one key per step. Probe
+  cost drops from `num_levels + 1` fan-out-4 steps to
+  `ceil(log_128(C/128)) + 1` block steps. Derived at probe time by
+  `bskiplist_layout` from the same state `skiplist_layout` reads — the
+  layout is an execution knob, not a second structure, which is what keeps
+  results/residency bit-identical across layouts.
 * **Bucket-major hash layout** — a bucket is one contiguous `[B]`-wide row
   (`[M, B]` planes); one bucket = one VMEM tile row, compared in a single
   vector op. `hash_slot` is the shared slot function (splitmix64, low bits).
@@ -275,6 +286,91 @@ def skiplist_layout(s) -> SkiplistLayout:
     return SkiplistLayout(lvl_hi=jnp.stack(his), lvl_lo=jnp.stack(los),
                           lvl_child=jnp.stack(chs), term_hi=th, term_lo=tl,
                           term_mark=s.term_mark.astype(jnp.int8))
+
+
+# ---------------------------------------------------------------------------
+# block-major B-skiplist layout (det_skiplist -> bskiplist_walk kernel)
+# ---------------------------------------------------------------------------
+
+# Lane-width block: one B-skiplist node holds this many sorted keys, matched
+# to the 128-lane VPU register tile so a node compare is ONE vector op.
+BSKIP_BLOCK = 128
+
+
+class BSkiplistLayout(NamedTuple):
+    """The deterministic skiplist re-blocked into lane-width fat nodes
+    (the B-skiplist view; cf. 2507.21492 / "Skiplists with Foresight").
+
+    Derived at probe time from the SAME DetSkiplist state as
+    `skiplist_layout` — state never changes shape, so switching layouts
+    cannot perturb residency or results. The sorted terminal level (KEY_INF
+    padding) is reshaped into NB = ceil(C/B) blocks of B keys; index level
+    0 nodes hold the B maxima of B consecutive terminal blocks (block max =
+    LAST entry, because blocks are sorted with KEY_INF padding at the end),
+    level l+1 summarizes level l the same way, until one node remains.
+    Index levels are stacked bottom-up into a [L, W] rectangle (W = widest
+    level's node count * B; node j of a row spans cells [j*B, (j+1)*B),
+    KEY_INF padding). A walk step loads one node row and computes
+    `sum(key_lt(entry, q))` — the searchsorted-left position of q — so the
+    descent is L + 1 whole-block compares total."""
+    blk_hi: jnp.ndarray     # [L, W] uint32 index-node entries (hi)
+    blk_lo: jnp.ndarray     # [L, W] uint32 index-node entries (lo)
+    term_hi: jnp.ndarray    # [NB * B] uint32 terminal keys (hi)
+    term_lo: jnp.ndarray    # [NB * B] uint32 terminal keys (lo)
+    term_mark: jnp.ndarray  # [NB * B] int8 tombstones
+
+    @property
+    def num_levels(self) -> int:
+        return self.blk_hi.shape[0]
+
+
+def bskip_num_levels(capacity: int, block: int = BSKIP_BLOCK) -> int:
+    """Index levels a `bskiplist_layout` over `capacity` terminals has —
+    the blocked walk runs this + 1 (terminal) block compares. Static, so
+    benches and tests can report steps/plan without building a layout."""
+    nb = -(-capacity // block)
+    levels = 1                                 # always >= 1 (root node)
+    while -(-nb // block) > 1:
+        nb = -(-nb // block)
+        levels += 1
+    return levels
+
+
+def bskiplist_layout(s, block: int = BSKIP_BLOCK) -> BSkiplistLayout:
+    """DetSkiplist (or any state with sorted KEY_INF-padded term_keys +
+    term_mark) -> block-major kernel layout. Pure reshape/reduce over the
+    terminal planes: index levels are DERIVED, mirroring how
+    `_rebuild_levels` derives the level-major index — deterministic block
+    splits/merges fall out of the batched sorted-merge for free (every
+    non-tail block holds exactly B live keys)."""
+    B = block
+    C = s.term_keys.shape[0]
+    nb = -(-C // B)
+    tk = jnp.pad(s.term_keys, (0, nb * B - C), constant_values=KEY_INF)
+    tm = jnp.pad(s.term_mark.astype(jnp.int8), (0, nb * B - C))
+    th, tl = split_u64(tk)
+
+    # bottom-up node planes: entries of level 0 = terminal block maxima
+    rows, counts = [], []
+    cur = tk.reshape(nb, B)[:, -1]             # [nb] block maxima (sorted)
+    while True:
+        n = cur.shape[0]
+        nn = -(-n // B)
+        row = jnp.pad(cur, (0, nn * B - n), constant_values=KEY_INF)
+        rows.append(row)
+        counts.append(nn)
+        cur = row.reshape(nn, B)[:, -1]        # node maxima for level above
+        if nn == 1:
+            break
+    W = counts[0] * B
+    his, los = [], []
+    for row in rows:
+        row = jnp.pad(row, (0, W - row.shape[0]), constant_values=KEY_INF)
+        h, l = split_u64(row)
+        his.append(h)
+        los.append(l)
+    return BSkiplistLayout(blk_hi=jnp.stack(his), blk_lo=jnp.stack(los),
+                           term_hi=th, term_lo=tl, term_mark=tm)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,12 @@ selective_scan    chunked SSM recurrence (Mamba-style selective scan)
 skiplist_search   batched deterministic-skiplist FIND: the 1-2-3-4
                   criterion's fixed L-level, fan-out-4 walk over the
                   level-major layout (`core.layout.skiplist_layout`)
+bskiplist_walk    batched B-skiplist FIND over the block-major layout
+                  (`core.layout.bskiplist_layout`): 128-key lane-width fat
+                  nodes, ONE whole-block `key_lt` compare + reduction per
+                  descent step — same found/idx contract as
+                  skiplist_search in ceil(log128 C) steps instead of the
+                  fan-out-4 walk's num_levels
 hash_probe        batched fixed-hash bucket probe over the bucket-major
                   layout (`core.layout.bucket_layout`) — the §IX hot-tier
                   fast path

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: batched B-skiplist search over the block-major layout
+the kernel consumes (keys as u32 hi/lo pairs, lane-width fat nodes).
+
+One step = one whole-node compare: `sum(key_lt(entry, q))` over the node's
+B sorted entries is the searchsorted-left position of q, so the descent
+computes exactly the terminal rank the level-major walk computes — found
+results are bit-identical by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layout import BSKIP_BLOCK, key_lt as _lt
+
+
+def bskiplist_walk_ref(q_hi, q_lo, blk_hi, blk_lo, term_hi, term_lo,
+                       term_mark, *, block: int = BSKIP_BLOCK):
+    """q_*: [T] u32; blk_*: [L, W]; term_*: [NB * B]. Returns (found
+    bool[T], idx int32[T]). Levels stacked bottom-up: row L-1 is the root
+    node; node j of a row spans cells [j*B, (j+1)*B)."""
+    L, W = blk_hi.shape
+    B = block
+    nb = term_hi.shape[0] // B
+    lanes = jnp.arange(B, dtype=jnp.int32)[None, :]
+    i = jnp.zeros(q_hi.shape, jnp.int32)            # root: node 0 of row L-1
+    for r in range(L - 1, -1, -1):
+        base = jnp.clip(i, 0, W // B - 1) * B
+        idx = base[:, None] + lanes
+        lt = _lt(blk_hi[r][idx], blk_lo[r][idx], q_hi[:, None], q_lo[:, None])
+        sel = jnp.sum(lt, axis=1).astype(jnp.int32)  # searchsorted-left
+        i = base + sel                               # child node / block id
+    blk = jnp.clip(i, 0, nb - 1)
+    idx = blk[:, None] * B + lanes
+    lt = _lt(term_hi[idx], term_lo[idx], q_hi[:, None], q_lo[:, None])
+    sel = jnp.sum(lt, axis=1).astype(jnp.int32)
+    i = jnp.clip(blk * B + sel, 0, term_hi.shape[0] - 1)
+    found = ((term_hi[i] == q_hi) & (term_lo[i] == q_lo)
+             & ~term_mark[i].astype(bool))
+    return found, i

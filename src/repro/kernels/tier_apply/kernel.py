@@ -15,8 +15,10 @@ victim gathers commit in the glue (`ops.py`) where u64 lanes exist.
 
 Shared bodies, not copies: the hot probe is
 `kernels.hash_probe.kernel.bucket_probe`, the warm walk is
-`kernels.skiplist_search.kernel.level_walk` — the same functions the fused
-find uses. The lane math mirrors `core.hashtable.bucket_insert_plan` /
+`kernels.skiplist_search.kernel.level_walk` (or
+`kernels.bskiplist_walk.kernel.block_walk` when the stack selected the
+block-major warm layout — no child plane in that case) — the same
+functions the fused find uses. The lane math mirrors `core.hashtable.bucket_insert_plan` /
 `kernels.tier_apply.ref.hot_insert_evict` term by term over (hi, lo) u32
 planes, so fused/unfused bit-identity is by construction.
 
@@ -51,7 +53,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.layout import key_lt as _lt
+from repro.core.layout import BSKIP_BLOCK, key_lt as _lt
+from repro.kernels.bskiplist_walk.kernel import block_walk
 from repro.kernels.hash_probe.kernel import bucket_probe
 from repro.kernels.skiplist_search.kernel import level_walk
 
@@ -97,20 +100,31 @@ def spill_chunk_probe(qh, ql, sp_hi, sp_lo, sp_dead, off, cbase, *,
 
 
 def _ta_kernel(*refs, levels: int, fanout: int, policy: str,
-               has_spill: bool, max_runs: int, chunk: int, n_chunks: int):
+               warm_blocked: bool, block: int, has_spill: bool,
+               max_runs: int, chunk: int, n_chunks: int):
     if has_spill:
         off_ref, me_ref = refs[0], refs[1]
-        (skh_ref, skl_ref, ss_ref, sm_ref, krs_ref, srs_ref,
-         kh_ref, kl_ref, meta_ref, lh_ref, ll_ref, lc_ref,
-         th_ref, tl_ref, tm_ref, sph_ref, spl_ref, spd_ref) = refs[2:20]
-        outs = refs[20:29]
-        acc_ref = refs[29]
+        i = 2
     else:
         me_ref = refs[0]
-        (skh_ref, skl_ref, ss_ref, sm_ref, krs_ref, srs_ref,
-         kh_ref, kl_ref, meta_ref, lh_ref, ll_ref, lc_ref,
-         th_ref, tl_ref, tm_ref) = refs[1:16]
-        outs = refs[16:25]
+        i = 1
+    (skh_ref, skl_ref, ss_ref, sm_ref, krs_ref, srs_ref,
+     kh_ref, kl_ref, meta_ref, lh_ref, ll_ref) = refs[i:i + 11]
+    i += 11
+    if warm_blocked:    # block-major warm planes carry no child plane
+        lc_ref = None
+    else:
+        lc_ref = refs[i]
+        i += 1
+    th_ref, tl_ref, tm_ref = refs[i:i + 3]
+    i += 3
+    if has_spill:
+        sph_ref, spl_ref, spd_ref = refs[i:i + 3]
+        i += 3
+        outs = refs[i:i + 9]
+        acc_ref = refs[i + 9]
+    else:
+        outs = refs[i:i + 9]
         acc_ref = None
 
     skh = skh_ref[...]
@@ -144,10 +158,16 @@ def _ta_kernel(*refs, levels: int, fanout: int, policy: str,
         # membership compose + fall-through (the exec.tier_find contract)
         hot_any, _ = bucket_probe(mqh, mql, ss, kh_ref[...], kl_ref[...])
         f_hot = hot_any & smb
-        warm_found, _ = level_walk(mqh, mql, lh_ref[...], ll_ref[...],
-                                   lc_ref[...], th_ref[...], tl_ref[...],
-                                   tm_ref[...], levels=levels,
-                                   fanout=fanout)
+        if warm_blocked:
+            warm_found, _ = block_walk(mqh, mql, lh_ref[...], ll_ref[...],
+                                       th_ref[...], tl_ref[...],
+                                       tm_ref[...], levels=levels,
+                                       block=block)
+        else:
+            warm_found, _ = level_walk(mqh, mql, lh_ref[...], ll_ref[...],
+                                       lc_ref[...], th_ref[...],
+                                       tl_ref[...], tm_ref[...],
+                                       levels=levels, fanout=fanout)
         f_warm = warm_found & smb
         if has_spill:
             f_sp = (acc_ref[...] != 0) & smb
@@ -234,18 +254,25 @@ def tier_apply_tiles(sk_hi, sk_lo, slots, sm, krs, srs, key_hi, key_lo,
                      meta, lvl_hi, lvl_lo, lvl_child, term_hi, term_lo,
                      term_mark, max_evict, sp_hi=None, sp_lo=None,
                      sp_dead=None, run_off=None, *, policy: str,
-                     spill_chunk: int = 512, interpret: bool = True):
+                     block: int = BSKIP_BLOCK, spill_chunk: int = 512,
+                     interpret: bool = True):
     """sk_*: [K] u32 keys in sorted (slot, key) lane order; slots/krs/srs:
     [K] i32 (slot per lane, key-run starts, slot-run starts); sm: [K] i8
     insert mask; key_*/meta: [M, B]; lvl_*: [L, C1]; term_*: [C];
     max_evict: [1] i32 (scalar-prefetched); sp_* [S] + run_off [R+1] i32
     (scalar-prefetched) or None for a 2-tier stack. Returns the 9 outputs
-    listed in the module docstring."""
+    listed in the module docstring. `lvl_child=None` selects the BLOCKED
+    warm walk: lvl_* then carry the `bskiplist_layout` [L, W] fat-node
+    rows and term_* its [NB*block] padded terminal planes."""
     k = sk_hi.shape[0]
-    L, _ = lvl_hi.shape
+    L = lvl_hi.shape[0]
+    warm_blocked = lvl_child is None
     has_spill = sp_hi is not None
     tensors = [sk_hi, sk_lo, slots, sm, krs, srs, key_hi, key_lo, meta,
-               lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark]
+               lvl_hi, lvl_lo]
+    if not warm_blocked:
+        tensors.append(lvl_child)
+    tensors += [term_hi, term_lo, term_mark]
     whole = lambda a: pl.BlockSpec(a.shape, lambda g, *_: (0,) * a.ndim)
     in_specs = [whole(a) for a in tensors]
     scalars = [max_evict]
@@ -274,7 +301,8 @@ def tier_apply_tiles(sk_hi, sk_lo, slots, sm, krs, srs, key_hi, key_lo,
 
     out_dtypes = [jnp.int8] * 6 + [jnp.int32] * 3
     kernel = functools.partial(_ta_kernel, levels=L, fanout=4,
-                               policy=policy, has_spill=has_spill,
+                               policy=policy, warm_blocked=warm_blocked,
+                               block=block, has_spill=has_spill,
                                max_runs=max_runs, chunk=chunk,
                                n_chunks=n_chunks)
     grid_spec = pltpu.PrefetchScalarGridSpec(

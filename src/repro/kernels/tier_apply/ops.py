@@ -18,18 +18,21 @@ import jax.numpy as jnp
 
 from repro.core import hashtable as ht
 from repro.core.bits import EMPTY
-from repro.core.layout import (bucket_layout, hash_slot, skiplist_layout,
-                               spill_layout, split_u64, val_weight)
+from repro.core.layout import (bskiplist_layout, bucket_layout, hash_slot,
+                               skiplist_layout, spill_layout, split_u64,
+                               val_weight)
 from repro.kernels.tier_apply.kernel import tier_apply_tiles
 
 
 def tier_apply_fused(hot, meta, clock, cold, spill, keys, vals, mask,
-                     policy: str, max_evict, *, spill_chunk: int = 512,
-                     interpret: bool = True):
+                     policy: str, max_evict, *, warm_layout: str = "level",
+                     spill_chunk: int = 512, interpret: bool = True):
     """One dispatch over the whole apply prologue. `hot` is a FixedHash
     (+ its [M, B] i32 `meta` plane and the batch `clock`), `cold` a
     DetSkiplist, `spill` a SpillTier or None. Returns the same 9-tuple as
-    `kernels.tier_apply.ref.tier_apply_ref`."""
+    `kernels.tier_apply.ref.tier_apply_ref`. `warm_layout="block"` runs
+    the in-kernel warm membership walk over the block-major B-skiplist
+    planes — same flags, fewer walk steps."""
     K = keys.shape[0]
     M, B = hot.num_slots, hot.bucket
     if mask is None:
@@ -52,11 +55,17 @@ def tier_apply_fused(hot, meta, clock, cold, spill, keys, vals, mask,
 
     skh, skl = split_u64(sk)
     blay = bucket_layout(hot.keys)
-    slay = skiplist_layout(cold)
+    if warm_layout == "block":
+        wlay = bskiplist_layout(cold)
+        warm_planes = (wlay.blk_hi, wlay.blk_lo, None,
+                       wlay.term_hi, wlay.term_lo, wlay.term_mark)
+    else:
+        slay = skiplist_layout(cold)
+        warm_planes = (slay.lvl_hi, slay.lvl_lo, slay.lvl_child,
+                       slay.term_hi, slay.term_lo, slay.term_mark)
     args = (skh, skl, ss, sm.astype(jnp.int8), krs.astype(jnp.int32), srs,
-            blay.key_hi, blay.key_lo, meta, slay.lvl_hi, slay.lvl_lo,
-            slay.lvl_child, slay.term_hi, slay.term_lo, slay.term_mark,
-            jnp.asarray(max_evict, jnp.int32).reshape(1))
+            blay.key_hi, blay.key_lo, meta) + warm_planes + (
+            jnp.asarray(max_evict, jnp.int32).reshape(1),)
     kw = {}
     if spill is not None:
         splay = spill_layout(spill.keys, spill.dead, spill.run_start,

@@ -85,21 +85,23 @@ def hot_insert_evict(hot: ht.FixedHash, meta, clock, keys, vals, mask,
 
 
 def tier_apply_ref(hot, meta, clock, cold, spill, keys, vals, mask,
-                   policy: str, max_evict):
+                   policy: str, max_evict, warm_layout: str = "level"):
     """The fused-apply prologue in jnp: lower-tier membership (with the
     dispatch layer's fall-through masking) + the policy-driven hot insert.
     Returns (hot', meta', in_warm[K], in_spill[K], ins[K], exists[K],
     ev_key[K], ev_val[K], ev_mask[K]) — see `store.exec.tier_apply` for
     the contract; `spill=None` (2-tier stacks) yields all-miss spill
-    lanes, `policy == "none"` all-miss eviction lanes."""
+    lanes, `policy == "none"` all-miss eviction lanes. `warm_layout`
+    selects the warm membership walk (level-major or blocked B-skiplist —
+    same hits either way)."""
     K = keys.shape[0]
     if K == 0:    # degenerate plan: no lanes, state unchanged
         z64 = jnp.zeros((0,), jnp.uint64)
         zb = jnp.zeros((0,), bool)
         return hot, meta, zb, zb, zb, zb, z64, z64, zb
     qk = jnp.where(mask, keys, KEY_INF)
-    (f_hot, _, _), (f_warm, _), (f_sp, _) = tier_find_ref(hot, cold, spill,
-                                                          qk)
+    (f_hot, _, _), (f_warm, _), (f_sp, _) = tier_find_ref(
+        hot, cold, spill, qk, warm_layout=warm_layout)
     # the exec.tier_find fall-through contract, verbatim: a warm hit only
     # counts on a hot miss, a spill hit only on a hot+warm miss
     in_warm = f_warm & ~f_hot

@@ -19,6 +19,11 @@ docs/tiers.md for the worked budget):
   * warm: `core.layout.skiplist_layout` [L, C1] u32/i32 level stack + flat
     [C] terminal planes; the walk body is
     `kernels.skiplist_search.kernel.level_walk` — shared, not copied.
+    Stacks built with `warm_layout="block"` pass the block-major
+    `core.layout.bskiplist_layout` planes instead ([L, W] fat-node rows, no
+    child plane — the child id is `node*128 + position`) and the walk body
+    is `kernels.bskiplist_walk.kernel.block_walk`: one whole-block compare
+    per step instead of a fan-out-4 gather, same found/idx contract.
   * cold: `core.layout.spill_layout` [S] u32 key planes + i8 tombstones +
     the [MAX_SPILL_RUNS + 1] i32 `run_offsets` plane. Each run is binary
     searched with `key_lt` (searchsorted "left" semantics), a static
@@ -40,7 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.layout import key_lt as _lt
+from repro.core.layout import BSKIP_BLOCK, key_lt as _lt
+from repro.kernels.bskiplist_walk.kernel import block_walk
 from repro.kernels.hash_probe.kernel import bucket_probe
 from repro.kernels.skiplist_search.kernel import level_walk
 
@@ -82,15 +88,22 @@ def spill_run_probe(qh, ql, sp_hi, sp_lo, sp_dead, run_off, *,
     return found, cell
 
 
-def _tf_kernel(*refs, levels: int, fanout: int, has_spill: bool,
-               max_runs: int, spill_steps: int):
-    (qh_ref, ql_ref, slot_ref, kh_ref, kl_ref,
-     lh_ref, ll_ref, lc_ref, th_ref, tl_ref, tm_ref) = refs[:11]
-    if has_spill:
-        sph_ref, spl_ref, spd_ref, off_ref = refs[11:15]
-        outs = refs[15:]
+def _tf_kernel(*refs, levels: int, fanout: int, warm_blocked: bool,
+               block: int, has_spill: bool, max_runs: int,
+               spill_steps: int):
+    if warm_blocked:     # block-major warm planes carry no child plane
+        (qh_ref, ql_ref, slot_ref, kh_ref, kl_ref,
+         lh_ref, ll_ref, th_ref, tl_ref, tm_ref) = refs[:10]
+        rest = refs[10:]
     else:
-        outs = refs[11:]
+        (qh_ref, ql_ref, slot_ref, kh_ref, kl_ref,
+         lh_ref, ll_ref, lc_ref, th_ref, tl_ref, tm_ref) = refs[:11]
+        rest = refs[11:]
+    if has_spill:
+        sph_ref, spl_ref, spd_ref, off_ref = rest[:4]
+        outs = rest[4:]
+    else:
+        outs = rest
     qh = qh_ref[...]
     ql = ql_ref[...]
 
@@ -99,10 +112,16 @@ def _tf_kernel(*refs, levels: int, fanout: int, has_spill: bool,
     outs[0][...] = hot_hit.astype(jnp.int8)
     outs[1][...] = hot_col
 
-    warm_found, warm_idx = level_walk(qh, ql, lh_ref[...], ll_ref[...],
-                                      lc_ref[...], th_ref[...], tl_ref[...],
-                                      tm_ref[...], levels=levels,
-                                      fanout=fanout)
+    if warm_blocked:
+        warm_found, warm_idx = block_walk(qh, ql, lh_ref[...], ll_ref[...],
+                                          th_ref[...], tl_ref[...],
+                                          tm_ref[...], levels=levels,
+                                          block=block)
+    else:
+        warm_found, warm_idx = level_walk(qh, ql, lh_ref[...], ll_ref[...],
+                                          lc_ref[...], th_ref[...],
+                                          tl_ref[...], tm_ref[...],
+                                          levels=levels, fanout=fanout)
     outs[2][...] = warm_found.astype(jnp.int8)
     outs[3][...] = warm_idx
 
@@ -117,13 +136,18 @@ def _tf_kernel(*refs, levels: int, fanout: int, has_spill: bool,
 def tier_find_tiles(q_hi, q_lo, slots, key_hi, key_lo, lvl_hi, lvl_lo,
                     lvl_child, term_hi, term_lo, term_mark, sp_hi=None,
                     sp_lo=None, sp_dead=None, run_off=None, *,
-                    tile: int = 256, interpret: bool = True):
+                    block: int = BSKIP_BLOCK, tile: int = 256,
+                    interpret: bool = True):
     """q_*: [T] u32; slots: [T] i32; key_*: [M, B]; lvl_*: [L, C1];
     term_*: [C]; sp_*: [S] (+ run_off [R+1] i32) or None for a 2-tier
     stack. Returns (hot i8[T], col i32[T], warm i8[T], idx i32[T]) plus
-    (spill i8[T], cell i32[T]) when the spill planes are given."""
+    (spill i8[T], cell i32[T]) when the spill planes are given.
+    `lvl_child=None` selects the BLOCKED warm walk: lvl_* then carry the
+    `bskiplist_layout` [L, W] fat-node rows and term_* its [NB*block]
+    padded terminal planes (warm idx is into that padded plane)."""
     t = q_hi.shape[0]
-    L, _ = lvl_hi.shape
+    L = lvl_hi.shape[0]
+    warm_blocked = lvl_child is None
     has_spill = sp_hi is not None
     n_out = 6 if has_spill else 4
     if t == 0:   # empty batch: same contract as the jnp references
@@ -136,8 +160,10 @@ def tier_find_tiles(q_hi, q_lo, slots, key_hi, key_lo, lvl_hi, lvl_lo,
     whole = lambda a: pl.BlockSpec(a.shape, lambda g: (0,) * a.ndim)
     qspec = pl.BlockSpec((tile,), lambda g: (g,))
 
-    ins = [q_hi, q_lo, slots, key_hi, key_lo,
-           lvl_hi, lvl_lo, lvl_child, term_hi, term_lo, term_mark]
+    ins = [q_hi, q_lo, slots, key_hi, key_lo, lvl_hi, lvl_lo]
+    if not warm_blocked:
+        ins.append(lvl_child)
+    ins += [term_hi, term_lo, term_mark]
     in_specs = [qspec, qspec, qspec] + [whole(a) for a in ins[3:]]
     max_runs = spill_steps = 0
     if has_spill:
@@ -149,6 +175,7 @@ def tier_find_tiles(q_hi, q_lo, slots, key_hi, key_lo, lvl_hi, lvl_lo,
 
     out_dtypes = ([jnp.int8, jnp.int32] * 3)[:n_out]
     kernel = functools.partial(_tf_kernel, levels=L, fanout=4,
+                               warm_blocked=warm_blocked, block=block,
                                has_spill=has_spill, max_runs=max_runs,
                                spill_steps=spill_steps)
     return pl.pallas_call(

@@ -14,27 +14,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bits import KEY_INF
-from repro.core.layout import (bucket_layout, hash_slot, skiplist_layout,
-                               spill_layout, split_u64)
+from repro.core.layout import (bskiplist_layout, bucket_layout, hash_slot,
+                               skiplist_layout, spill_layout, split_u64)
 from repro.kernels.tier_find.kernel import tier_find_tiles
 
 
-def tier_find_fused(hot, cold, spill, queries, *, tile: int = 256,
-                    interpret: bool = True):
+def tier_find_fused(hot, cold, spill, queries, *, warm_layout: str = "level",
+                    tile: int = 256, interpret: bool = True):
     """One dispatch over the whole tier stack. `hot` is a FixedHash,
     `cold` a DetSkiplist, `spill` a SpillTier or None (2-tier stacks).
     Returns ((found, vals, col), (found, vals), (found, vals)) — the same
-    raw per-tier contract as `kernels.tier_find.ref.tier_find_ref`."""
+    raw per-tier contract as `kernels.tier_find.ref.tier_find_ref`.
+    `warm_layout="block"` walks the warm tier through the block-major
+    B-skiplist planes (`core.layout.bskiplist_layout`) instead of the
+    level-major stack — same found/vals, fewer walk steps."""
     t = queries.shape[0]
     pad = (-t) % tile
     qp = jnp.pad(queries, (0, pad), constant_values=KEY_INF)
     qh, ql = split_u64(qp)
     slots = hash_slot(qp, hot.num_slots)
     blay = bucket_layout(hot.keys)
-    slay = skiplist_layout(cold)
-    args = (qh, ql, slots, blay.key_hi, blay.key_lo, slay.lvl_hi,
-            slay.lvl_lo, slay.lvl_child, slay.term_hi, slay.term_lo,
-            slay.term_mark)
+    if warm_layout == "block":
+        wlay = bskiplist_layout(cold)
+        warm_planes = (wlay.blk_hi, wlay.blk_lo, None,
+                       wlay.term_hi, wlay.term_lo, wlay.term_mark)
+    else:
+        slay = skiplist_layout(cold)
+        warm_planes = (slay.lvl_hi, slay.lvl_lo, slay.lvl_child,
+                       slay.term_hi, slay.term_lo, slay.term_mark)
+    args = (qh, ql, slots, blay.key_hi, blay.key_lo) + warm_planes
     if spill is not None:
         sp = spill_layout(spill.keys, spill.dead, spill.run_start, spill.n)
         args += (sp.key_hi, sp.key_lo, sp.dead, sp.run_off)

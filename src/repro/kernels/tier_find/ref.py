@@ -55,14 +55,19 @@ def spill_find_runs(keys, vals, dead, run_start, n, queries,
     return found, jnp.where(found, vals[cell], jnp.uint64(0))
 
 
-def tier_find_ref(hot, cold, spill, queries):
+def tier_find_ref(hot, cold, spill, queries, warm_layout: str = "level"):
     """Raw per-tier probes with the reference implementations:
     ((hot found, vals, col), (warm found, vals), (spill found, vals));
-    spill=None (2-tier stacks) yields all-miss spill results."""
+    spill=None (2-tier stacks) yields all-miss spill results. The warm
+    probe walks the layout the stack selected: level-major fan-out-4
+    (`find_batch`) or the block-major B-skiplist (`find_batch_blocked`) —
+    bit-identical found/vals either way."""
     from repro.core import det_skiplist as dsl
     from repro.core import hashtable as ht
     f_hot, v_hot, c_hot = ht.fixed_find_cols(hot, queries)
-    f_warm, v_warm, _ = dsl.find_batch(cold, queries)
+    warm_find = (dsl.find_batch_blocked if warm_layout == "block"
+                 else dsl.find_batch)
+    f_warm, v_warm, _ = warm_find(cold, queries)
     if spill is None:
         f_sp = jnp.zeros(queries.shape, bool)
         v_sp = jnp.zeros(queries.shape, jnp.uint64)

@@ -43,6 +43,9 @@ common contract first: this module defines it.
     tiered3              §IX three-tier stack (hash -> skiplist -> spill)
     tiered3/lru          tiered3 with LRU-by-batch hot-tier eviction
     tiered3/size         tiered3 with size-aware hot-tier eviction
+    tiered3/b128         tiered3 probing the warm tier through the
+                         block-major B-skiplist layout (128-key lane-width
+                         nodes) — bit-identical results and residency
     pq                   priority queue over the det skiplist: POPMIN /
                          POPK bulk extraction (arXiv:1509.07053 design)
 

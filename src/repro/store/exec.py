@@ -18,7 +18,9 @@ comparisons, so parity is by construction, and mode choice is purely a
 performance knob.
 
 Kernelized probes: the deterministic skiplist search
-(`kernels.skiplist_search`), the fixed-hash bucket probe
+(`kernels.skiplist_search`; its block-major B-skiplist twin
+`kernels.bskiplist_walk`, dispatched by `bskiplist_find` — lane-width fat
+nodes, one whole-block compare per step), the fixed-hash bucket probe
 (`kernels.hash_probe` — also the §IX hot-tier fast path), the FUSED
 tier-stack find (`kernels.tier_find` — hot probe + warm walk + per-run
 spill search in ONE pallas_call, dispatched by `tier_find`), the
@@ -286,6 +288,22 @@ def skiplist_find(s, queries, mode: str | None = None):
 
 
 @_probe
+def bskiplist_find(s, queries, mode: str | None = None):
+    """Deterministic-skiplist FIND through the block-major B-skiplist view
+    (`core.layout.bskiplist_layout`): same (found[Q], vals[Q], term_idx[Q])
+    contract and bit-identical found/vals as `skiplist_find`, but the walk
+    compares one lane-width fat node (128 sorted keys) per step instead of
+    a fan-out-4 gather — `tiered3/b128`'s warm probe. The layout, like the
+    mode, is a probe-execution knob over unchanged state."""
+    m = _resolve(mode)
+    if m == "jnp":
+        from repro.core import det_skiplist as dsl
+        return dsl.find_batch_blocked(s, queries)
+    from repro.kernels.bskiplist_walk.ops import bskiplist_find as bsk_find
+    return bsk_find(s, queries, interpret=(m == "interpret"))
+
+
+@_probe
 def pq_pop(s, ranks, mask, mode: str | None = None):
     """Priority-queue rank-select on a DetSkiplist: the rank-th smallest
     live key per lane. Returns (found[K], keys[K] u64, idx[K] i32) — a pure
@@ -389,10 +407,13 @@ def spill_find(sp, queries, mode: str | None = None):
 
 
 @_probe
-def tier_find(hot, cold, spill, queries, mode: str | None = None):
+def tier_find(hot, cold, spill, queries, mode: str | None = None,
+              warm_layout: str = "level"):
     """FUSED tier-stack FIND — the whole hot -> warm -> cold chain as ONE
-    dispatch per plan (`kernels.tier_find`): VMEM bucket probe, level-major
-    skiplist walk, per-run searchsorted over the spill boundaries. Returns
+    dispatch per plan (`kernels.tier_find`): VMEM bucket probe, warm
+    skiplist walk (level-major fan-out-4, or the block-major B-skiplist
+    walk when `warm_layout="block"` — same results, fewer steps), per-run
+    searchsorted over the spill boundaries. Returns
     ((hot found, vals, col), (warm found, vals), (spill found, vals)) with
     miss FALL-THROUGH applied: a warm hit only counts on a hot miss, a
     spill hit only on a hot+warm miss (under single-tier residency the
@@ -403,10 +424,12 @@ def tier_find(hot, cold, spill, queries, mode: str | None = None):
     m = _resolve(mode)
     if m == "jnp":
         from repro.kernels.tier_find.ref import tier_find_ref
-        hot_r, warm_r, sp_r = tier_find_ref(hot, cold, spill, queries)
+        hot_r, warm_r, sp_r = tier_find_ref(hot, cold, spill, queries,
+                                            warm_layout=warm_layout)
     else:
         from repro.kernels.tier_find.ops import tier_find_fused
         hot_r, warm_r, sp_r = tier_find_fused(hot, cold, spill, queries,
+                                              warm_layout=warm_layout,
                                               interpret=(m == "interpret"))
     import jax.numpy as jnp
     f_hot, v_hot, c_hot = hot_r
@@ -451,11 +474,13 @@ def hot_update(hot, meta, clock, keys, vals, mask, policy, max_evict,
 
 @_update
 def tier_apply(hot, meta, clock, cold, spill, keys, vals, mask, policy,
-               max_evict, mode: str | None = None):
+               max_evict, mode: str | None = None,
+               warm_layout: str = "level"):
     """FUSED tier-stack APPLY prologue — membership probes + the hot-tier
     insert plan + victim selection as ONE dispatch per plan
     (`kernels.tier_apply`): the `tier_find` probe chain (bucket probe,
-    level walk, per-run spill search with the `run_offsets` plane
+    warm walk in the selected `warm_layout` — level-major or the blocked
+    B-skiplist — per-run spill search with the `run_offsets` plane
     scalar-prefetched so spill chunks stream through VMEM), then the
     sorted insert prologue (dup/exists/candidate lanes, nth-empty column,
     eviction-rank victim selection off the policy metadata plane) inside
@@ -470,8 +495,10 @@ def tier_apply(hot, meta, clock, cold, spill, keys, vals, mask, policy,
     if m == "jnp":
         from repro.kernels.tier_apply.ref import tier_apply_ref
         return tier_apply_ref(hot, meta, clock, cold, spill, keys, vals,
-                              mask, policy, max_evict)
+                              mask, policy, max_evict,
+                              warm_layout=warm_layout)
     from repro.kernels.tier_apply.ops import tier_apply_fused
     return tier_apply_fused(hot, meta, clock, cold, spill, keys, vals,
                             mask, policy, max_evict,
+                            warm_layout=warm_layout,
                             interpret=(m == "interpret"))

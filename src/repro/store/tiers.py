@@ -88,9 +88,18 @@ just results) by `tests/test_tiers3.py`.
 reductions over the hot table and the live spill-run entries; materialized
 rows are the sorted union of all tiers, truncated at `max_out`.
 
+Warm probe layout (the `warm_layout` knob, default "level"): "block"
+walks the warm tier through the block-major B-skiplist planes
+(`core.layout.bskiplist_layout` — lane-width 128-key fat nodes, one
+whole-block compare per descent step) instead of the level-major
+fan-out-4 stack, on the fused AND unfused paths. Like `fused`, it is an
+execution knob: results, the full residency pytree, and the metrics
+plane are bit-identical across layouts (`tests/test_bskiplist.py`).
+
 Registered configurations (see `store.api`): `hash+skiplist` (2-tier,
 policy `none` — unchanged semantics), `tiered3`, `tiered3/lru`,
-`tiered3/size` (3-tier). Any depth/policy combination can be constructed
+`tiered3/size` (3-tier), `tiered3/b128` (3-tier, block-major warm walks).
+Any depth/policy combination can be constructed
 directly: `TieredBackend(depth=2, policy="lru")`. Capacity sizing: the warm
 tier holds `capacity` entries and (depth 3) the spill runs another
 `spill_cap` (default `capacity`), so policy-driven demotion always has
@@ -282,15 +291,23 @@ class TieredBackend:
     kernelized = True      # fused tier find / per-tier probes -> kernels
 
     def __init__(self, promote: bool = True, depth: int = 2,
-                 policy: str = "none", fused: bool = True):
+                 policy: str = "none", fused: bool = True,
+                 warm_layout: str = "level"):
         assert depth in (2, 3), "2 (hash->skiplist) or 3 (+ host spill)"
         assert policy in POLICIES, f"policy must be one of {POLICIES}"
+        assert warm_layout in ("level", "block")
         self.promote = promote
         self.depth = depth
         self.policy = policy
         self.fused = fused     # one tier_find dispatch per probe phase
+        # warm probe layout: level-major fan-out-4 walk, or the block-major
+        # B-skiplist (lane-width fat nodes, one whole-block compare per
+        # step). An execution knob like `fused` — results, residency, and
+        # the metrics plane are bit-identical either way.
+        self.warm_layout = warm_layout
         base = "hash+skiplist" if depth == 2 else "tiered3"
-        self.name = base if policy == "none" else f"{base}/{policy}"
+        name = base if policy == "none" else f"{base}/{policy}"
+        self.name = name + ("/b128" if warm_layout == "block" else "")
 
     def init(self, capacity: int, hot_bucket: int = 8, hot_frac: int = 8,
              spill_cap: int | None = None, **kw) -> TierState:
@@ -330,7 +347,11 @@ class TieredBackend:
         exactly once and the spill probe binary-searches every live run, so
         the counts are exact per probed lane — and identical on the fused
         and unfused paths by construction, since both consume the same
-        inputs."""
+        inputs. The counters use the level-major walk formula for BOTH
+        warm layouts: `warm_layout` is an execution knob like `fused`, and
+        the metrics plane must stay bit-identical across execution knobs
+        (the blocked walk's smaller step count is reported in the bench
+        rows, not here)."""
         if not obs.collecting():
             return
         lanes = jnp.sum(queries != KEY_INF).astype(jnp.int64)
@@ -378,10 +399,14 @@ class TieredBackend:
                 (hot, meta, in_cold, in_spill, ins_hot, ex_hot,
                  ev_k, ev_v, ev_m) = exec_.tier_apply(
                     hot, meta, clock, cold, spill, keys, vals, ins_m,
-                    self.policy, self._headroom(cold, spill))
+                    self.policy, self._headroom(cold, spill),
+                    warm_layout=self.warm_layout)
                 try_hot = ins_m & ~in_cold & ~in_spill
             else:
-                in_cold, _, _ = exec_.skiplist_find(cold, ins_k)
+                warm_find = (exec_.bskiplist_find
+                             if self.warm_layout == "block"
+                             else exec_.skiplist_find)
+                in_cold, _, _ = warm_find(cold, ins_k)
                 if spill is not None:
                     in_spill, _ = exec_.spill_find(spill, ins_k)
                 else:
@@ -423,10 +448,14 @@ class TieredBackend:
             self._record_probe_cost(cold, spill, qk)
             if self.fused:
                 ((f_hot, v_hot, c_hot), (f_cold, v_cold),
-                 (f_spill, v_spill)) = exec_.tier_find(hot, cold, spill, qk)
+                 (f_spill, v_spill)) = exec_.tier_find(
+                    hot, cold, spill, qk, warm_layout=self.warm_layout)
             else:
+                warm_find = (exec_.bskiplist_find
+                             if self.warm_layout == "block"
+                             else exec_.skiplist_find)
                 f_hot, v_hot, c_hot = exec_.hash_find_cols(hot, qk)
-                f_cold, v_cold, _ = exec_.skiplist_find(cold, qk)
+                f_cold, v_cold, _ = warm_find(cold, qk)
                 if spill is not None:
                     f_spill, v_spill = exec_.spill_find(spill, qk)
                 else:
@@ -597,10 +626,12 @@ def unfused_twin(name: str) -> TieredBackend:
     be = get_backend(name)
     assert isinstance(be, TieredBackend), f"{name!r} is not a tier stack"
     return TieredBackend(promote=be.promote, depth=be.depth,
-                         policy=be.policy, fused=False)
+                         policy=be.policy, fused=False,
+                         warm_layout=be.warm_layout)
 
 
 HASH_SKIPLIST = register(TieredBackend())
 TIERED3 = register(TieredBackend(depth=3))
 TIERED3_LRU = register(TieredBackend(depth=3, policy="lru"))
 TIERED3_SIZE = register(TieredBackend(depth=3, policy="size"))
+TIERED3_B128 = register(TieredBackend(depth=3, warm_layout="block"))

@@ -1,0 +1,106 @@
+"""Structural invariant checks for the block-major B-skiplist layout.
+
+The warm tier's blocked layout (`core.layout.bskiplist_layout`) is DERIVED
+at probe time from the deterministic skiplist's packed terminal plane, so
+its invariants follow from the derivation — but "follows by construction"
+is exactly the claim a refactor silently breaks. These checkers audit the
+derived planes the same way `core.det_skiplist.check_invariants` audits
+the level-major state: host-side numpy, a dict of violation counts, zero
+everywhere on a healthy structure.
+
+Checked invariants (docs/store_layers.md, "Block-major B-skiplist"):
+
+  block_unsorted     every terminal block's keys are non-decreasing and
+                     every index-level row is non-decreasing (sorted
+                     blocks are what make the one-compare-per-block
+                     `searchsorted` descent correct)
+  bad_occupancy      deterministic split/merge occupancy: every block
+                     holds between ceil(B/2) and B live keys EXCEPT the
+                     tail block of each level (the derivation packs
+                     blocks full, so interior blocks hold exactly B —
+                     strictly inside the classical B-structure bound)
+  bad_level_shape    level monotonicity: level r has ceil(n_{r-1} / B)
+                     nodes, strictly decreasing up to a single root node
+  bad_block_max      each index entry equals the LAST key of the block it
+                     summarizes (block max; KEY_INF pads absorb partial
+                     tails so routing of over-max queries stays correct)
+  bad_padding        cells past a level's node count are KEY_INF
+  bad_tombstones     tombstone accounting: layout `term_mark` matches the
+                     skiplist's mark plane and `n_marked` equals the
+                     marked-cell population inside the packed prefix
+
+`check_bskiplist_invariants(s)` takes a DetSkiplist; `assert_bskiplist_ok`
+raises with the violation dict. Wired into the tier/pq parity suites
+(tests/test_tiers3.py, tests/test_pq.py) and the differential harness
+(tests/test_differential.py) so every randomized stream audits the
+blocked layout it probed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.layout import BSKIP_BLOCK, KEY_INF, bskiplist_layout
+
+
+def check_bskiplist_invariants(s, block: int = BSKIP_BLOCK) -> dict:
+    """Audit the blocked layout derived from DetSkiplist `s`. Returns a
+    dict of violation counts — all zero on a healthy structure."""
+    B = block
+    lay = bskiplist_layout(s, block)
+    out = {"block_unsorted": 0, "bad_occupancy": 0, "bad_level_shape": 0,
+           "bad_block_max": 0, "bad_padding": 0, "bad_tombstones": 0}
+
+    def u64(hi, lo):
+        return (np.asarray(hi, np.uint64) << np.uint64(32)) \
+            | np.asarray(lo, np.uint64)
+
+    term = u64(lay.term_hi, lay.term_lo)
+    nb = term.shape[0] // B
+    blocks = term.reshape(nb, B)
+    occ = np.sum(blocks != KEY_INF, axis=1)
+    n_live = int(np.sum(occ))
+    # live blocks form a packed prefix; interior ones must satisfy the
+    # B-structure occupancy bound (the derivation packs them full)
+    last_live = int(np.max(np.nonzero(occ)[0])) if n_live else 0
+    for j in range(nb):
+        row = blocks[j]
+        if np.any(np.diff(row.astype(np.float64)) < 0):
+            out["block_unsorted"] += 1
+        if j < last_live and not ((B + 1) // 2 <= occ[j] <= B):
+            out["bad_occupancy"] += 1
+
+    # index levels: shape, sortedness, block-max linkage
+    lvls = u64(lay.blk_hi, lay.blk_lo)          # [L, W]
+    child = term.reshape(nb, B)
+    n_prev = nb
+    for r in range(lvls.shape[0]):
+        n_r = -(-n_prev // B)
+        row = lvls[r]
+        if np.any(np.diff(row.astype(np.float64)) < 0):
+            out["block_unsorted"] += 1
+        maxima = child[:, -1]                    # last entry = block max
+        if not np.array_equal(row[:n_prev], maxima):
+            out["bad_block_max"] += 1
+        if np.any(row[n_prev:] != KEY_INF):      # level + stack pads
+            out["bad_padding"] += 1
+        child = row[:n_r * B].reshape(n_r, B)
+        n_prev = n_r
+    if n_prev != 1:                              # must shrink to one root
+        out["bad_level_shape"] += 1
+
+    # tombstone accounting against the source-of-truth mark plane
+    mark = np.asarray(lay.term_mark).astype(bool)
+    src_mark = np.asarray(s.term_mark).astype(bool)
+    n = int(s.n_term)
+    if not np.array_equal(mark[:src_mark.shape[0]], src_mark):
+        out["bad_tombstones"] += 1
+    if int(np.sum(src_mark[:n])) != int(s.n_marked) or np.any(src_mark[n:]):
+        out["bad_tombstones"] += 1
+    return out
+
+
+def assert_bskiplist_ok(s, ctx="", block: int = BSKIP_BLOCK):
+    """Raise AssertionError with the violation dict on any failure."""
+    out = check_bskiplist_invariants(s, block)
+    bad = {k: v for k, v in out.items() if v}
+    assert not bad, (ctx, bad)

@@ -351,6 +351,55 @@ def check_fused_apply(mesh, name: str = "tiered3/lru") -> None:
           f"evictions={evs[0]} modes=jnp,interpret")
 
 
+def check_bskip(mesh) -> None:
+    """BSKIP-OK: the warm tier's block-major probe layout under sharding.
+    An engine over `tiered3/b128` (B-skiplist warm walk, fused) and one
+    over `tiered3` (level-major walk) must produce bit-identical results
+    AND bit-identical per-shard residency for the same global op stream,
+    in both exec modes — the layout knob, like fusion, is invisible to
+    the 8-device mesh."""
+    total = N_SHARDS * LANES
+    rng = np.random.default_rng(117)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 24, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(ROUNDS):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], size=total,
+                         p=[0.5, 0.4, 0.1]).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)
+        rounds.append((ops, keys))
+
+    for mode in ("jnp", "interpret"):
+        states, results = [], []
+        for backend in ("tiered3", "tiered3/b128"):
+            eng = StoreEngine(mesh, AXES, LANES, backend=backend,
+                              pool_factor=8, exec_mode=mode)
+            state = jax.device_put(eng.init(64, hot_bucket=4, hot_frac=8),
+                                   eng.sharding)
+            put = lambda x: jax.device_put(jnp.asarray(x), eng.sharding)
+            outs = []
+            for ops, keys in rounds:
+                state, res, ok, dropped = eng.step(state, put(ops),
+                                                   put(keys), put(keys + 3))
+                assert int(dropped) == 0, mode
+                outs.append((np.asarray(ok), np.asarray(res)))
+            states.append(state)
+            results.append(outs)
+        for rnd, ((ok_l, v_l), (ok_b, v_b)) in enumerate(zip(*results)):
+            assert (ok_l == ok_b).all(), (mode, rnd)
+            assert (v_l == v_b).all(), (mode, rnd)
+        la, lb = jax.tree.leaves(states[0]), jax.tree.leaves(states[1])
+        assert len(la) == len(lb)
+        for i, (a, b) in enumerate(zip(la, lb)):
+            assert (np.asarray(a) == np.asarray(b)).all(), (mode, i)
+    print(f"BSKIP-OK backend=tiered3/b128 shards={N_SHARDS} "
+          f"modes=jnp,interpret")
+
+
 def check_metrics(mesh, backend: str = "obs:tiered3/lru") -> None:
     """METRICS-OK: the observability plane under sharding. Each shard of an
     `obs:`-wrapped engine carries its own metrics counters (on dim 0, like
@@ -511,6 +560,7 @@ def main() -> int:
     check_tier_residency(mesh)
     check_fused_vs_unfused(mesh)
     check_fused_apply(mesh)
+    check_bskip(mesh)
     check_metrics(mesh)
     check_pq(mesh)
     return 0

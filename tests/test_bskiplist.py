@@ -1,0 +1,190 @@
+"""B-skiplist warm tier: blocked-walk parity + the execution-knob contract.
+
+The block-major layout (`core.layout.bskiplist_layout` — 128-key
+lane-width fat nodes derived at probe time from the UNCHANGED skiplist
+state) must be a pure execution knob: `find_batch_blocked`, the
+`bskiplist_walk` kernel, and the `tiered3/b128` stack all return the
+exact bits of their level-major counterparts. Covered here: walk-level
+parity across capacities and tombstone churn (jnp / kernel interpret /
+jitted), layout shape + step-count laws, backend-level bit-identity of
+results AND the full residency pytree vs `tiered3` across exec modes and
+fused/unfused, the 23-counter metrics-plane identity (layout must not
+leak into observability), and snapshot scans. The structural invariants
+live in tests/invariants.py; the randomized streams in
+tests/test_differential.py audit both. (The 8-device engine analogue
+runs in tests/multidev/store_prog.py: BSKIP-OK.)
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (enables x64)
+from repro.core import det_skiplist as dsl
+from repro.core.bits import KEY_INF
+from repro.core.layout import BSKIP_BLOCK, bskip_num_levels, bskiplist_layout
+from repro.kernels.bskiplist_walk.ops import bskiplist_find, bskiplist_search
+from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, get_backend,
+                         make_plan)
+from repro.store import exec as exec_
+from repro.store.tiers import unfused_twin
+
+from invariants import assert_bskiplist_ok
+
+MODES = exec_.runnable_modes()
+
+
+def _populated(cap, seed=0, delete_frac=5):
+    """A skiplist with inserts + a tombstone fraction (marked cells stay
+    in the terminal plane — the case the found-mask must get right)."""
+    rng = np.random.default_rng(seed)
+    s = dsl.skiplist_init(cap)
+    n = max(cap - cap // 8, 1)
+    ks = np.unique(rng.integers(1, 1 << 62, size=2 * cap,
+                                dtype=np.uint64))[:n]
+    s, _, _ = dsl.insert_batch(s, jnp.asarray(ks), jnp.asarray(ks + 3),
+                               jnp.ones((len(ks),), bool))
+    dele = rng.choice(ks, size=max(len(ks) // delete_frac, 1), replace=False)
+    s, _ = dsl.delete_batch(s, jnp.asarray(dele),
+                            jnp.ones((len(dele),), bool))
+    return s, ks, dele
+
+
+def _queries(ks, dele, seed=1, n_miss=64):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.concatenate([
+        ks[:: max(len(ks) // 64, 1)], dele[:16],
+        rng.integers(1, 1 << 62, size=n_miss, dtype=np.uint64),
+        np.array([KEY_INF], np.uint64)]))
+
+
+# ---------------------------------------------------------------------------
+# walk-level parity: jnp reference, kernel, jitted wrapper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap", [64, 128, 300, 1 << 13])
+def test_blocked_find_matches_level_walk(cap):
+    s, ks, dele = _populated(cap)
+    q = _queries(ks, dele)
+    f0, v0, _ = dsl.find_batch(s, q)
+    f1, v1, _ = dsl.find_batch_blocked(s, q)
+    f2, v2, _ = bskiplist_find(s, q, interpret=True)
+    f3, v3, _ = bskiplist_search(s, q)
+    for tag, (f, v) in {"jnp": (f1, v1), "kernel": (f2, v2),
+                        "jit": (f3, v3)}.items():
+        assert (np.asarray(f) == np.asarray(f0)).all(), (cap, tag)
+        assert (np.asarray(v) == np.asarray(v0)).all(), (cap, tag)
+    assert np.asarray(f0)[-1] == False            # noqa: E712 — KEY_INF lane
+    assert_bskiplist_ok(s, f"cap={cap}")
+
+
+def test_blocked_find_empty_and_full_miss():
+    s = dsl.skiplist_init(128)
+    q = jnp.asarray(np.array([1, 2, KEY_INF], np.uint64))
+    for fn in (dsl.find_batch_blocked,
+               lambda s, q: bskiplist_find(s, q, interpret=True)):
+        f, v, _ = fn(s, q)
+        assert not np.asarray(f).any()
+        assert not np.asarray(v).any()
+
+
+def test_blocked_layout_shape_laws():
+    """Level monotonicity + the step-count law: the blocked walk descends
+    ceil(log_B(blocks)) index levels + 1 terminal block — strictly fewer
+    block compares than the fan-out-4 walk's levels at every capacity the
+    warm tier actually uses."""
+    B = BSKIP_BLOCK
+    for cap in (64, 128, 1 << 9, 1 << 13, 1 << 17):
+        s = dsl.skiplist_init(cap)
+        lay = bskiplist_layout(s)
+        L = lay.num_levels
+        assert L == bskip_num_levels(cap)
+        assert lay.term_hi.shape[0] == -(-cap // B) * B
+        # blocked steps (L index rows + 1 terminal block) vs level-major
+        # steps (num_levels + 1): the measured BENCH_probe_modes reduction
+        if cap > B:
+            assert L + 1 < s.num_levels + 1, cap
+        # stacked index planes share one block-aligned padded width
+        W = lay.blk_hi.shape[1]
+        assert L >= 1 and lay.blk_lo.shape == (L, W) and W % B == 0
+
+
+# ---------------------------------------------------------------------------
+# backend-level: tiered3/b128 is an execution knob, not a semantics change
+# ---------------------------------------------------------------------------
+
+def _mixed_plans(seed=21, n_rounds=5, width=48, pool_size=96):
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(1, 2**62, pool_size, dtype=np.uint64)
+    plans = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], width,
+                         p=[0.5, 0.35, 0.15]).astype(np.int32)
+        keys = rng.choice(pool, width)
+        mask = rng.random(width) > 0.05
+        plans.append(make_plan(ops, keys, keys + 1, mask))
+    return plans
+
+
+def assert_states_equal(sa, sb, ctx):
+    la, lb = jax.tree.leaves(sa), jax.tree.leaves(sb)
+    assert len(la) == len(lb), ctx
+    for i, (a, b) in enumerate(zip(la, lb)):
+        assert (np.asarray(a) == np.asarray(b)).all(), (ctx, i)
+
+
+def test_b128_backend_bit_identical_to_level_major():
+    """`tiered3/b128` == `tiered3` for results AND the full residency
+    pytree, fused and unfused, in every runnable exec mode."""
+    plans = _mixed_plans()
+    for mode in MODES:
+        with exec_.exec_mode(mode):
+            bes = [get_backend("tiered3"), get_backend("tiered3/b128"),
+                   unfused_twin("tiered3/b128")]
+            sts = [b.init(64, hot_bucket=4, hot_frac=8) for b in bes]
+            steps = [jax.jit(b.apply) for b in bes]
+            for rnd, p in enumerate(plans):
+                outs = []
+                for j in range(len(bes)):
+                    sts[j], r = steps[j](sts[j], p)
+                    outs.append(r)
+                for j in (1, 2):
+                    assert (np.asarray(outs[0].ok)
+                            == np.asarray(outs[j].ok)).all(), (mode, rnd, j)
+                    assert (np.asarray(outs[0].vals)
+                            == np.asarray(outs[j].vals)).all(), \
+                        (mode, rnd, j)
+                    assert_states_equal(sts[0], sts[j], (mode, rnd, j))
+            assert_bskiplist_ok(sts[1].cold, mode)
+
+
+def test_b128_scan_and_stats_identical():
+    be_a, be_b = get_backend("tiered3"), get_backend("tiered3/b128")
+    st_a = be_a.init(64, hot_bucket=4, hot_frac=8)
+    st_b = be_b.init(64, hot_bucket=4, hot_frac=8)
+    for p in _mixed_plans(seed=5, n_rounds=3):
+        st_a, _ = be_a.apply(st_a, p)
+        st_b, _ = be_b.apply(st_b, p)
+    lo = jnp.asarray([0], jnp.uint64)
+    hi = jnp.asarray([KEY_INF], jnp.uint64)
+    sa, sb = be_a.scan(st_a, lo, hi, 64), be_b.scan(st_b, lo, hi, 64)
+    for a, b in zip(sa, sb):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert {k: int(v) for k, v in be_a.stats(st_a).items()} \
+        == {k: int(v) for k, v in be_b.stats(st_b).items()}
+
+
+def test_b128_metrics_plane_identical():
+    """The 23-counter metrics plane must not see the layout knob: an
+    observed `tiered3/b128` run records the SAME counters as `tiered3`
+    (warm_probe_steps stays the level-walk formula on both — the blocked
+    walk's step saving is a bench-row fact, not a semantics change)."""
+    rows = {}
+    for name in ("obs:tiered3", "obs:tiered3/b128"):
+        be = get_backend(name)
+        st = be.init(64, hot_bucket=4, hot_frac=8)
+        for p in _mixed_plans(seed=9, n_rounds=3):
+            st, _ = be.apply(st, p)
+        rows[name] = {k: int(v) for k, v in be.metrics(st).items()}
+    assert rows["obs:tiered3"] == rows["obs:tiered3/b128"]

@@ -1,0 +1,241 @@
+"""Differential oracle: random op streams vs a sorted-dict model.
+
+Property-based cross-validation of EVERY registered backend against a
+plain python sorted-dict oracle implementing the store contract's
+linearization (INSERTS -> DELETES -> RANGE_DELETES -> POPS -> FINDS,
+first lane wins on in-batch duplicates, masked lanes are no-ops). The
+parity suites compare backends to each OTHER; a shared bug survives that.
+The oracle is implemented from the CONTRACT (store/api.py docstring), so
+agreement here is evidence the contract itself holds, not just that the
+implementations agree.
+
+Streams are hypothesis-driven when hypothesis is installed and fall back
+to `tests/_hypothesis_fallback.py`'s seeded deterministic examples when
+it is not (same test code either way). Keys come from a small adversarial
+pool — duplicates land in every batch, and the pool crosses the u32
+hi/lo split boundaries the (hi, lo)-plane kernels compare on.
+
+Asserted per stream: per-lane results (`ok`/`vals`), ordered `scan()`
+rows + exact counts, `stats()` size accounting — and, for every backend
+carrying a deterministic-skiplist plane (flat or warm tier), the blocked
+B-skiplist layout invariants (tests/invariants.py), so each randomized
+stream also audits the derived block layout it probed.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (enables x64)
+from repro.core.bits import KEY_INF
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # tier-1 runs dependency-free
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
+
+from invariants import assert_bskiplist_ok
+from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_POPK,
+                         OP_POPMIN, OP_RANGE_DELETE, available_backends,
+                         get_backend, make_plan)
+
+ALL_BACKENDS = available_backends()
+ORDERED = [n for n in ALL_BACKENDS if get_backend(n).ordered]
+RANGE_DEL = ["det_skiplist", "pq"]       # backends wiring range_delete_fn
+POPS = ["pq"]                            # POPMIN/POPK bulk extraction
+
+WIDTH = 8                                # lanes per plan (static jit shape)
+
+# adversarial key pool: in-batch duplicates are near-certain at this size,
+# and the values straddle the u32 hi/lo split ((hi, lo) plane compares),
+# sit at power-of-two hash boundaries, and reach near the u62 key ceiling
+POOL = np.array([1, 2, 3, (1 << 32) - 1, 1 << 32, (1 << 32) + 1,
+                 (1 << 40) | 5, (1 << 62) - 1, (1 << 62) - 2, 7 << 58],
+                dtype=np.uint64)
+
+BASIC_OPS = (OP_INSERT, OP_FIND, OP_DELETE)
+LANE = st.tuples(st.sampled_from(range(-1, 7)),       # op code (or idle)
+                 st.integers(0, len(POOL) - 1),       # pool key index
+                 st.booleans())                       # lane mask
+STREAM = st.lists(LANE, min_size=4, max_size=4 * WIDTH)
+
+
+class DictOracle:
+    """The store contract over a python dict, lane by lane. Sequential
+    per-phase processing IS the contract's first-lane-wins rule."""
+
+    def __init__(self):
+        self.d = {}
+        self.pops = 0
+        self.pop_empty = 0
+
+    def apply(self, ops, keys, vals, mask):
+        K = len(ops)
+        ok = np.zeros(K, bool)
+        out = np.zeros(K, np.uint64)
+        live = [i for i in range(K) if mask[i] and ops[i] >= 0]
+        for i in live:                               # INSERTS
+            if ops[i] == OP_INSERT:
+                k = int(keys[i])
+                existed = k in self.d
+                if not existed:
+                    self.d[k] = int(vals[i])
+                ok[i] = True
+                out[i] = np.uint64(existed)
+        for i in live:                               # DELETES
+            if ops[i] == OP_DELETE:
+                ok[i] = self.d.pop(int(keys[i]), None) is not None
+        for i in live:                               # RANGE_DELETES
+            if ops[i] == OP_RANGE_DELETE:
+                lo, hi = int(keys[i]), int(vals[i])
+                hit = [k for k in self.d if lo <= k < hi]
+                for k in hit:
+                    del self.d[k]
+                ok[i] = bool(hit)
+                out[i] = np.uint64(len(hit))
+        for i in live:                               # POPS (one rank pool)
+            if ops[i] in (OP_POPMIN, OP_POPK):
+                if self.d:
+                    k = min(self.d)
+                    v = self.d.pop(k)
+                    ok[i] = True
+                    out[i] = np.uint64(v if ops[i] == OP_POPMIN else k)
+                    self.pops += 1
+                else:
+                    self.pop_empty += 1
+        for i in live:                               # FINDS (post-update)
+            if ops[i] == OP_FIND:
+                k = int(keys[i])
+                if k in self.d:
+                    ok[i] = True
+                    out[i] = np.uint64(self.d[k])
+        return ok, out
+
+
+def _plans(stream, allowed, round_salt):
+    """Pad the lane stream to whole WIDTH-lane plans; ops outside `allowed`
+    become idle lanes so every backend in the comparison supports the
+    whole stream. Values are key-and-round-derived (stable, nonzero)."""
+    lanes = list(stream) + [(-1, 0, False)] * ((-len(stream)) % WIDTH)
+    plans = []
+    for r in range(0, len(lanes), WIDTH):
+        chunk = lanes[r:r + WIDTH]
+        ops = np.array([op if op in allowed else OP_NONE
+                        for op, _, _ in chunk], np.int32)
+        keys = POOL[[ki for _, ki, _ in chunk]]
+        vals = keys * np.uint64(2) + np.uint64(round_salt + r + 1)
+        # RANGE_DELETE lanes: keys = lo, vals = hi (a pool-spanning window)
+        rd = ops == OP_RANGE_DELETE
+        vals = np.where(rd, keys + np.uint64(1 << 33), vals)
+        mask = np.array([m for _, _, m in chunk], bool)
+        plans.append((ops, keys, vals, mask))
+    return plans
+
+
+def _dsl_states(name, state):
+    """Every deterministic-skiplist plane a backend state carries (flat
+    state, warm tier, or pq's underlying skiplist) — the structures the
+    blocked-layout invariants audit."""
+    if name in ("det_skiplist", "rand_skiplist"):
+        return [state]
+    if hasattr(state, "cold"):
+        return [state.cold]
+    if hasattr(state, "heap"):               # pq
+        return [state.heap]
+    return []
+
+
+# one jitted step per backend for the whole module: plans share a static
+# WIDTH-lane shape, so every hypothesis example reuses the same compile
+_JIT_STEP = {}
+
+
+def _step(name):
+    if name not in _JIT_STEP:
+        _JIT_STEP[name] = jax.jit(get_backend(name).apply)
+    return _JIT_STEP[name]
+
+
+def _run_differential(names, allowed, stream, salt=0):
+    oracle = DictOracle()
+    bes = {n: get_backend(n) for n in names}
+    sts = {n: be.init(256) for n, be in bes.items()}
+    for rnd, (ops, keys, vals, mask) in enumerate(_plans(stream, allowed,
+                                                         salt)):
+        want_ok, want_vals = oracle.apply(ops, keys, vals, mask)
+        plan = make_plan(ops, keys, vals, mask)
+        for n in names:
+            sts[n], res = _step(n)(sts[n], plan)
+            assert (np.asarray(res.ok) == want_ok).all(), (n, rnd)
+            assert (np.asarray(res.vals) == want_vals).all(), (n, rnd)
+
+    want_rows = sorted(oracle.d.items())
+    lo, hi = jnp.asarray([0], jnp.uint64), jnp.asarray([KEY_INF], jnp.uint64)
+    for n in names:
+        s = {k: int(v) for k, v in bes[n].stats(sts[n]).items()}
+        assert s["size"] == len(oracle.d), n
+        if n in POPS:
+            assert s["pops"] == oracle.pops, n
+            assert s["pop_empty"] == oracle.pop_empty, n
+        if bes[n].ordered:
+            cnt, ks, vs, valid = bes[n].scan(sts[n], lo, hi, 64)
+            rows = [(int(k), int(v)) for k, v, m in
+                    zip(np.asarray(ks[0]), np.asarray(vs[0]),
+                        np.asarray(valid[0])) if m]
+            assert int(cnt[0]) == len(want_rows), n
+            assert rows == want_rows, n
+        for dsl_state in _dsl_states(n, sts[n]):
+            assert_bskiplist_ok(dsl_state, n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(STREAM)
+def test_differential_all_backends(stream):
+    """INSERT/FIND/DELETE streams with duplicate + adversarial keys:
+    every registered backend == the dict oracle, results + scan + stats,
+    and every skiplist plane passes the blocked-layout invariants."""
+    _run_differential(ALL_BACKENDS, BASIC_OPS, stream)
+
+
+@settings(max_examples=20, deadline=None)
+@given(STREAM)
+def test_differential_range_delete(stream):
+    """Streams adding RANGE_DELETE windows (lane keys = lo, vals = hi)
+    on the backends that wire `range_delete_fn`."""
+    _run_differential(RANGE_DEL, BASIC_OPS + (OP_RANGE_DELETE,), stream,
+                      salt=1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(STREAM)
+def test_differential_pq_pops(stream):
+    """The full op surface (pops + range deletes + the basic trio) on the
+    priority-queue backend: the shared rank pool must equal sequential
+    pop-min on the oracle, including pops against an empty queue."""
+    _run_differential(POPS, BASIC_OPS + (OP_RANGE_DELETE, OP_POPMIN,
+                                         OP_POPK), stream, salt=2)
+
+
+def test_oracle_is_not_vacuous():
+    """The harness must FAIL on a wrong implementation: a backend that
+    drops deletes diverges from the oracle on the very first find."""
+    class DropDeletes:
+        def __init__(self):
+            self.inner = get_backend("det_skiplist")
+            self.state = self.inner.init(64)
+
+    be = get_backend("det_skiplist")
+    stt = be.init(64)
+    oracle = DictOracle()
+    ops = np.array([OP_INSERT, OP_DELETE, OP_FIND], np.int32)
+    keys = np.array([5, 5, 5], np.uint64)
+    vals = np.array([7, 0, 0], np.uint64)
+    mask = np.array([True, True, True])
+    want_ok, _ = oracle.apply(ops, keys, vals, mask)
+    # sabotage: drop the delete lane -> the find must disagree
+    ops_bad = np.array([OP_INSERT, OP_NONE, OP_FIND], np.int32)
+    stt, res = be.apply(stt, make_plan(ops_bad, keys, vals, mask))
+    assert bool(np.asarray(res.ok)[2]) != bool(want_ok[2])

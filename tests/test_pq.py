@@ -30,6 +30,8 @@ from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, OP_NONE, OP_POPK,
                          OP_POPMIN, OP_RANGE_DELETE, get_backend, make_plan)
 from repro.store import exec as exec_
 
+from invariants import assert_bskiplist_ok
+
 MODES = exec_.runnable_modes()
 
 
@@ -189,6 +191,8 @@ class TestModelAndDeterminism:
             assert np.array_equal(np.asarray(res.vals),
                                   np.asarray(vals, np.uint64))
         assert int(be.stats(st)["size"]) == len(model)
+        # churned heap still yields a sound derived block layout
+        assert_bskiplist_ok(st.heap, f"pq seed={seed}")
 
     def test_replay_bit_identical(self):
         be = get_backend("pq")
@@ -232,6 +236,7 @@ class TestExecModeParity:
             for a, b in zip(ref_out[1], out[1]):
                 assert np.array_equal(np.asarray(a), np.asarray(b)), \
                     f"state diverges in {mode}"
+            assert_bskiplist_ok(st.heap, mode)
 
     def test_obs_pop_counters_mode_parity(self):
         be = get_backend("obs:pq")

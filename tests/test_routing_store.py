@@ -23,4 +23,5 @@ def test_sharded_store_multidevice():
     assert "UNEVEN-OK" in out.stdout
     assert "RESIDENCY-OK" in out.stdout
     assert "FUSED-OK" in out.stdout
+    assert "BSKIP-OK" in out.stdout
     assert "PQ-OK" in out.stdout

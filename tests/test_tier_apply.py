@@ -27,8 +27,14 @@ from repro.store import exec as exec_
 from repro.store.tiers import unfused_twin
 
 MODES = exec_.runnable_modes()
-TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size"]
-POLICY_OF = {"tiered3": "none", "tiered3/lru": "lru", "tiered3/size": "size"}
+TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size",
+          "tiered3/b128"]
+POLICY_OF = {"tiered3": "none", "tiered3/lru": "lru",
+             "tiered3/size": "size", "tiered3/b128": "none"}
+
+
+def _warm_layout_of(name):
+    return "block" if name.endswith("/b128") else "level"
 
 
 def assert_states_equal(sa, sb, ctx):
@@ -77,7 +83,8 @@ def test_tier_apply_exec_matches_ref_across_modes(name):
     for mode in MODES:
         outs[mode] = exec_.tier_apply(st.hot, st.hot_meta, st.clock,
                                       st.cold, st.spill, keys, vals, mask,
-                                      POLICY_OF[name], 8, mode)
+                                      POLICY_OF[name], 8, mode,
+                                      warm_layout=_warm_layout_of(name))
     ref_mode, ref = next(iter(outs.items()))
     for mode, got in outs.items():
         assert_states_equal(ref, got, (name, ref_mode, mode))

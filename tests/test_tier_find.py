@@ -27,7 +27,9 @@ from repro.store import exec as exec_
 from repro.store.tiers import spill_find_ref, spill_init, unfused_twin
 
 MODES = exec_.runnable_modes()
-TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size"]
+TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size",
+          "tiered3/b128"]
+WARM_LAYOUTS = ("level", "block")
 
 
 def _mixed_plans(seed=21, n_rounds=5, width=48, pool_size=96):
@@ -165,19 +167,25 @@ def _loaded_state(name, seed=7):
     return be, st, ks
 
 
+@pytest.mark.parametrize("warm_layout", WARM_LAYOUTS)
 @pytest.mark.parametrize("name", ["tiered3", "hash+skiplist"])
-def test_tier_find_matches_unfused_probes(name):
+def test_tier_find_matches_unfused_probes(name, warm_layout):
     """Probe-level parity: one tier_find call vs the three (or two)
-    separate exec probes, same state, every runnable mode."""
+    separate exec probes, same state, every runnable mode — under BOTH
+    warm layouts (the unfused warm probe is the matching layout's walk:
+    `skiplist_find` or `bskiplist_find`)."""
     _, st, ks = _loaded_state(name)
     rng = np.random.default_rng(5)
     queries = jnp.asarray(np.concatenate(
         [ks[:20], rng.integers(1, 2**62, 12, dtype=np.uint64)]))
+    warm_find = (exec_.bskiplist_find if warm_layout == "block"
+                 else exec_.skiplist_find)
     for mode in MODES:
         (fh, vh, ch), (fc, vc), (fs, vs) = exec_.tier_find(
-            st.hot, st.cold, st.spill, queries, mode)
+            st.hot, st.cold, st.spill, queries, mode,
+            warm_layout=warm_layout)
         rh, rvh, rch = exec_.hash_find_cols(st.hot, queries, mode)
-        rc, rvc, _ = exec_.skiplist_find(st.cold, queries, mode)
+        rc, rvc, _ = warm_find(st.cold, queries, mode)
         if st.spill is not None:
             rs, rvs = exec_.spill_find(st.spill, queries, mode)
         else:
@@ -244,25 +252,32 @@ def test_fused_residency_bit_identical_across_modes(name):
         assert_states_equal(ref, st, (name, mode))
 
 
-def test_fused_find_is_one_dispatch():
+@pytest.mark.parametrize("name", ["tiered3", "tiered3/b128"])
+def test_fused_find_is_one_dispatch(name):
     """The acceptance criterion, measured: in fused mode the FIND chain is
     ONE exec dispatch per plan regardless of tier depth (the unfused chain
     pays one per tier), and a whole fused apply traces 2 dispatches total
     (ONE tier_apply update + ONE FIND-phase probe) against the unfused 6
-    (2 insert probes + 1 hot_update + 3 FIND probes)."""
-    _, st, _ = _loaded_state("tiered3")
+    (2 insert probes + 1 hot_update + 3 FIND probes). The warm layout is
+    an execution knob: `tiered3/b128` has the SAME budgets — the blocked
+    walk changes steps per dispatch, never dispatches per plan."""
+    be = get_backend(name)
+    wl = be.warm_layout
+    _, st, _ = _loaded_state(name)
     q = jnp.asarray(np.arange(1, 33, dtype=np.uint64))
     with exec_.measure_dispatches() as m_f:
-        exec_.tier_find(st.hot, st.cold, st.spill, q)
+        exec_.tier_find(st.hot, st.cold, st.spill, q, warm_layout=wl)
     assert (m_f.n, m_f.probe, m_f.update) == (1, 1, 0)
+    warm_find = (exec_.bskiplist_find if wl == "block"
+                 else exec_.skiplist_find)
     with exec_.measure_dispatches() as m_u:
         exec_.hash_find_cols(st.hot, q)
-        exec_.skiplist_find(st.cold, q)
+        warm_find(st.cold, q)
         exec_.spill_find(st.spill, q)
     assert (m_u.n, m_u.probe, m_u.update) == (3, 3, 0)
 
     plan = make_plan(np.full(32, OP_FIND, np.int32), np.asarray(q))
-    fused, unf = get_backend("tiered3"), unfused_twin("tiered3")
+    fused, unf = get_backend(name), unfused_twin(name)
     with exec_.measure_dispatches() as m_f:
         jax.make_jaxpr(fused.apply)(st, plan)
     assert (m_f.n, m_f.probe, m_f.update) == (2, 1, 1), \

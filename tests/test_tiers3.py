@@ -21,7 +21,10 @@ from repro.store import (OP_DELETE, OP_FIND, OP_INSERT, get_backend,
                          make_plan)
 from repro.store import exec as exec_
 
-TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size"]
+from invariants import assert_bskiplist_ok
+
+TIERED = ["hash+skiplist", "tiered3", "tiered3/lru", "tiered3/size",
+          "tiered3/b128"]
 POLICIED = ["tiered3/lru", "tiered3/size"]
 
 
@@ -350,6 +353,8 @@ def test_residency_bit_identical_across_modes(name):
     ref_mode, ref = next(iter(states.items()))
     for mode, st in states.items():
         assert_states_equal(ref, st, (name, ref_mode, mode))
+        # the warm tier's derived block layout stays sound in every mode
+        assert_bskiplist_ok(st.cold, (name, mode))
 
 
 @pytest.mark.parametrize("name", POLICIED)
@@ -379,3 +384,4 @@ def test_engine_residency_matches_direct_apply(name):
         assert int(dropped) == 0
         direct, _ = be.apply(direct, make_plan(ops, keys, keys + 7))
     assert_states_equal(jax.tree.map(lambda x: x[0], state), direct, name)
+    assert_bskiplist_ok(direct.cold, name)
