@@ -25,13 +25,13 @@ def main() -> None:
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    from benchmarks import (framework_bench, probe_modes, serve_trace,
-                            table1_queues, table2_3_skiplist,
+    from benchmarks import (framework_bench, probe_modes, recovery,
+                            serve_trace, table1_queues, table2_3_skiplist,
                             table4_det_vs_rand, table5_8_hashes, tiers_churn)
     mods = {m.__name__.rsplit(".", 1)[-1]: m
             for m in (table1_queues, table2_3_skiplist, table4_det_vs_rand,
                       table5_8_hashes, probe_modes, tiers_churn,
-                      serve_trace, framework_bench)}
+                      serve_trace, recovery, framework_bench)}
     unknown = set(args.only or ()) - set(mods)
     if unknown:
         ap.error(f"unknown table(s) {sorted(unknown)}; "

@@ -74,8 +74,10 @@ def run_backend(name: str, rounds, exec_mode: str | None = None) -> list:
     stats = eng.stats(state)   # the Store.stats() accessor — no internals
     print(f"  [{name}] per-shard live sizes (top-3-bit key partition): "
           f"{stats['size']}")
-    extra = {k: v.sum() for k, v in stats.items()
-             if k not in ("size", "capacity") and int(v.sum())}
+    # "seq" is the engine's host step counter — a plain int, not a
+    # per-shard plane, and it counts batches rather than structure totals
+    extra = {k: np.sum(v) for k, v in stats.items()
+             if k not in ("size", "capacity", "seq") and int(np.sum(v))}
     if extra:
         print(f"  [{name}] totals: " + ", ".join(
             f"{k}={int(v)}" for k, v in sorted(extra.items())))

@@ -7,7 +7,25 @@ Host loop (like every production engine) around jitted device steps:
   -> decode batch via paged attention -> finished requests recycle pages.
 
 Admission is capacity-aware: a request only admits if the pool can cover its
-pages (allocation failure = stay queued — the paper's retry semantics).
+pages (allocation failure = retry with deterministic capped backoff: the
+request parks for min(backoff_base * 2^(attempt-1), backoff_cap) engine
+TICKS — never wall clock — then resubmits, counted in `retries`).
+
+Graceful degradation (docs/resilience.md):
+
+* **deadlines** — a request with `deadline >= 0` must be admitted within
+  that many ticks of its first submit; expiry is checked lazily when the
+  scheduler pops it (no extra scans) and an expired request is dropped
+  with empty output (`deadline_expired`).
+* **load shedding** — with `shed_threshold` set, a pending backlog above
+  it sheds the LOWEST priority band (largest priority value) first via one
+  `scheduler.cancel_class` RANGE_DELETE plan (`shed` counts dropped
+  requests). Priority 0 work is shed last, matching the priority-inversion
+  contract of the traffic generator.
+* **faults** — a `fault_plan` (resilience.FaultPlan) injects scheduler
+  store drops at step boundaries; the journaled scheduler detects and
+  rebuilds before the next plan, so outputs stay bit-identical to the
+  fault-free replay (asserted in tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -31,9 +49,12 @@ class Request:
     prompt: np.ndarray
     max_new: int
     priority: int = 0
+    deadline: int = -1      # max ticks from first submit to admission (<0: none)
     out: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    shed: bool = False      # dropped by overload shedding / deadline expiry
+    attempts: int = 0       # admission attempts (drives the capped backoff)
     submit_step: int = -1   # engine step of first submit (admit latency t0)
     admit_step: int = -1    # engine step the request won a slot
 
@@ -41,15 +62,27 @@ class Request:
 class Engine:
     def __init__(self, cfg, params, *, max_reqs: int = 8, num_pages: int = 64,
                  page_size: int = 16, max_pages_per_req: int = 16,
-                 use_kernel: bool = False, use_prefix_cache: bool = True):
+                 use_kernel: bool = False, use_prefix_cache: bool = True,
+                 shed_threshold: int | None = None, shed_band: int = 2,
+                 backoff_base: int = 1, backoff_cap: int = 8,
+                 fault_plan=None, resilient: bool = False):
         assert cfg.attn_type == "gqa" and cfg.block_pattern == "transformer"
         self.cfg = cfg
         self.params = params
         self.kv = KV.paged_kv_init(cfg, num_pages=num_pages, page_size=page_size,
                                    max_reqs=max_reqs,
                                    max_pages_per_req=max_pages_per_req)
-        self.sched = SCH.scheduler_init(max_pending=1024)
+        # a fault plan needs the journaled scheduler to recover from
+        self.sched = SCH.scheduler_init(
+            max_pending=1024, resilient=resilient or fault_plan is not None)
         self.pc = PC.prefix_cache_init() if use_prefix_cache else None
+        self.shed_threshold = shed_threshold
+        self.shed_band = shed_band
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.fault_plan = fault_plan
+        self.res = obs.resilience_zero()   # engine-level host tally
+        self._parked: list[tuple[int, int]] = []   # (retry_at_step, req_id)
         self.max_reqs = max_reqs
         self.requests: dict[int, Request] = {}
         self.slot_to_req = [-1] * max_reqs
@@ -115,6 +148,47 @@ class Engine:
             keys.append(int(prev[0]))
         return keys
 
+    def _park(self, req: Request):
+        """Deterministic capped exponential backoff, in engine ticks: the
+        n-th failed admission parks the request for
+        min(backoff_base * 2^(n-1), backoff_cap) steps before resubmission
+        (attempt 1 with the defaults = next step, the original immediate
+        retry). Resubmissions are counted in `retries`."""
+        req.attempts += 1
+        delay = min(self.backoff_base * (2 ** (req.attempts - 1)),
+                    self.backoff_cap)
+        self._parked.append((self.steps + delay, req.req_id))
+
+    def _release_parked(self):
+        due = [rid for t, rid in self._parked if t <= self.steps]
+        self._parked = [(t, rid) for t, rid in self._parked
+                        if t > self.steps]
+        for rid in due:
+            if self.requests[rid].done:           # shed/expired while parked
+                continue
+            self.res["retries"] += 1
+            self.submit(self.requests[rid])
+
+    def _shed_overload(self):
+        """Above `shed_threshold` pending, drop the lowest priority band in
+        ONE RANGE_DELETE plan (`scheduler.cancel_class`) and mark the shed
+        requests done with empty output. Parked requests are not in the pq
+        store, so they are shed from the park list directly."""
+        if self.shed_threshold is None:
+            return
+        if int(SCH.pending(self.sched)) <= self.shed_threshold:
+            return
+        self.sched, n = SCH.cancel_class(self.sched, self.shed_band)
+        parked_ids = {rid for _, rid in self._parked}
+        for req in self.requests.values():
+            if (not req.done and req.slot < 0
+                    and req.priority == self.shed_band
+                    and req.submit_step >= 0
+                    and req.req_id not in parked_ids):
+                req.done = True
+                req.shed = True
+        self.res["shed"] += n
+
     def _admit(self):
         free = self._free_slots()
         if not free:
@@ -127,9 +201,18 @@ class Engine:
             if not valid[j]:
                 continue
             req = self.requests[int(rids[j])]
+            if req.done:                          # shed while queued
+                continue
+            # lazy deadline expiry: checked when the scheduler pops it
+            if (req.deadline >= 0
+                    and self.steps > req.submit_step + req.deadline):
+                req.done = True
+                req.shed = True
+                self.res["deadline_expired"] += 1
+                continue
             slot = free.pop(0) if free else -1
             if slot < 0:
-                self.submit(req)                  # back to the queue
+                self._park(req)                   # back off, then requeue
                 continue
             plen = len(req.prompt)
             page = self.kv.page_size
@@ -161,8 +244,8 @@ class Engine:
                 jnp.asarray([plen], jnp.int32), jnp.ones((1,), bool),
                 shared_pages=jnp.asarray(shared),
                 n_shared=jnp.asarray([n_hit], jnp.int32))
-            if not bool(ok[0]):                   # pool exhausted: stay queued
-                self.submit(req)
+            if not bool(ok[0]):                   # pool exhausted: back off
+                self._park(req)
                 continue
             self.kv = kv2
             if n_hit:
@@ -218,8 +301,15 @@ class Engine:
         return [i for i, r in enumerate(self.slot_to_req) if r >= 0]
 
     def step(self):
-        """One engine iteration: admit, decode one token for every active
-        request, retire finished ones."""
+        """One engine iteration: inject any scheduled fault, release parked
+        retries, shed under overload, admit, decode one token for every
+        active request, retire finished ones."""
+        if self.fault_plan is not None:
+            for f in self.fault_plan.at(self.steps):
+                if f.kind == "shard_drop":
+                    self.sched = SCH.inject_fault(self.sched)
+        self._release_parked()
+        self._shed_overload()
         with obs.span("admit"):
             self._admit()
         active = self._active_slots()
@@ -278,3 +368,17 @@ class Engine:
                         if self.steps else 0.0),
             decode_steps=self.steps,
             decode_tokens=self.decode_tokens)
+
+    def resilience_metrics(self) -> dict:
+        """The full `obs.METRICS_SCHEMA` view of the scheduler store with
+        every host-side resilience tally folded in: the engine's own
+        (deadline_expired / shed / retries) plus the journaled scheduler's
+        (faults_injected / recoveries / replayed_ops), via
+        `obs.merge_resilience`. Deterministic — every count is a pure
+        function of (config, trace, fault seed)."""
+        tally = dict(self.res)
+        if self.sched.res is not None:
+            for k, v in self.sched.res.tally.items():
+                tally[k] += v
+        m = {k: int(v) for k, v in SCH.metrics(self.sched).items()}
+        return obs.merge_resilience(m, tally)

@@ -11,26 +11,61 @@ hot path is the SAME jit-traced, shardable store step the kvstore workload
 uses (exec-mode parity and the pops/pop_empty metrics plane come for
 free). No direct skiplist calls remain here — the Store contract is the
 only dependency.
+
+Fault tolerance (docs/resilience.md): `scheduler_init(resilient=True)`
+attaches a `SchedResilience` record — a write-ahead `resilience.Journal` of
+every store plan plus a snapshot of the empty store — so a dropped
+scheduler store (injected by the serving engine's fault plan, detected by
+the `state_alive` probe before the next plan touches it) is rebuilt to the
+exact pre-fault state by `recover()`. Cancellation rides the Store API
+too: `cancel_class` drops an entire priority band's pending entries with
+ONE `OP_RANGE_DELETE` lane over the band's contiguous key range
+[priority << 32, (priority+1) << 32) — the load-shedding primitive the
+serving engine uses under overload. The arrival ring is deliberately NOT
+drained on cancellation (it is FIFO; the store is the authoritative
+pending set), so `ring_depth` can overcount after a shed — documented in
+docs/serving.md.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import dataclasses
+from typing import Any, NamedTuple, Optional
 
+import numpy as np
 import jax.numpy as jnp
 
 from repro.core.bits import make_priority_key
 from repro.core.ringqueue import RingQueue, pop_batch, push_batch, queue_init
 from repro.store import engine as engine_mod
 from repro.store import exec as exec_
-from repro.store.api import OP_INSERT, OP_NONE, OP_POPMIN
+from repro.store import obs
+from repro.store import resilience as res_mod
+from repro.store.api import OP_INSERT, OP_NONE, OP_POPMIN, OP_RANGE_DELETE
 
 BACKEND = "obs:pq"
+
+# lane width of a cancel_class plan (one active RANGE_DELETE lane, padded
+# so the cached local engine for this width is shared across calls)
+CANCEL_LANES = 4
+
+
+@dataclasses.dataclass
+class SchedResilience:
+    """Host-side mutable resilience record riding inside the Scheduler
+    NamedTuple (never traced): write-ahead journal of every store plan, the
+    snapshot it replays from, the host-side resilience tally
+    (`obs.RESILIENCE_SCHEMA`), and the plan seq counter."""
+    journal: res_mod.Journal
+    snapshot: res_mod.Snapshot
+    tally: dict
+    seq: int = 0
 
 
 class Scheduler(NamedTuple):
     arrivals: RingQueue          # §III queue of packed (priority, req_id)
     store: Any                   # sharded `obs:pq` store state (1-shard)
     next_ticket: jnp.ndarray     # uint32 monotone
+    res: Optional[SchedResilience] = None   # journaled mode (host-side)
 
 
 def _engine(lanes: int) -> engine_mod.StoreEngine:
@@ -41,12 +76,69 @@ def _engine(lanes: int) -> engine_mod.StoreEngine:
 
 
 def scheduler_init(max_pending: int, queue_blocks: int = 16,
-                   block_size: int = 64) -> Scheduler:
+                   block_size: int = 64,
+                   resilient: bool = False) -> Scheduler:
+    store = engine_mod.sharded_init(BACKEND, 1, max_pending)
+    res = None
+    if resilient:
+        res = SchedResilience(journal=res_mod.Journal(base_seq=0),
+                              snapshot=res_mod.take_snapshot(store, 0),
+                              tally=obs.resilience_zero())
     return Scheduler(
         arrivals=queue_init(queue_blocks, block_size, jnp.uint64),
-        store=engine_mod.sharded_init(BACKEND, 1, max_pending),
+        store=store,
         next_ticket=jnp.uint32(0),
+        res=res,
     )
+
+
+def health(s: Scheduler) -> bool:
+    """Liveness probe of the (1-shard) scheduler store state."""
+    return bool(res_mod.state_alive(s.store, 1)[0])
+
+
+def recover(s: Scheduler):
+    """Rebuild the scheduler store from snapshot + journal: replay every
+    journaled plan through the SAME cached local engine steps the live
+    calls used (entry lane width selects the engine). Returns the rebuilt
+    store state; the ring and ticket counter are untouched — the fault
+    model targets the store. Bit-identical to the pre-fault store by the
+    journal contract; asserted by tests/test_serving.py."""
+    r = s.res
+    if r is None:
+        raise ValueError("scheduler_init(resilient=True) required to recover")
+    state = res_mod.snapshot_state(r.snapshot)
+    replayed = 0
+    with obs.span("recover", mode="scheduler", replay=len(r.journal)):
+        for e in r.journal.entries:
+            state, _, _, _ = _engine(e.ops.shape[0]).step(
+                state, jnp.asarray(e.ops), jnp.asarray(e.keys),
+                jnp.asarray(e.vals))
+            replayed += e.n_ops
+    r.tally["recoveries"] += 1
+    r.tally["replayed_ops"] += replayed
+    return state
+
+
+def inject_fault(s: Scheduler) -> Scheduler:
+    """Drop the scheduler store (zero its 1-shard state slice) — the
+    serving engine's chaos hook. Counted in `faults_injected`."""
+    if s.res is not None:
+        s.res.tally["faults_injected"] += 1
+    return s._replace(store=res_mod.inject_shard_drop(s.store, 0))
+
+
+def _store_step(s: Scheduler, ops, keys, vals):
+    """Every scheduler plan funnels through here: in journaled mode, check
+    health (recovering a dropped store BEFORE the plan touches it), then
+    write-ahead journal the plan, then step the cached local engine."""
+    store = s.store
+    if s.res is not None:
+        if not health(s):
+            store = recover(s)
+        s.res.journal.append(s.res.seq, ops, keys, vals)
+        s.res.seq += 1
+    return _engine(ops.shape[0]).step(store, ops, keys, vals)
 
 
 def submit(s: Scheduler, priorities: jnp.ndarray, req_ids: jnp.ndarray,
@@ -58,10 +150,10 @@ def submit(s: Scheduler, priorities: jnp.ndarray, req_ids: jnp.ndarray,
     keys = make_priority_key(priorities.astype(jnp.uint32), tickets)
     q, ok = push_batch(s.arrivals, keys, mask)
     ops = jnp.where(mask & ok, OP_INSERT, OP_NONE).astype(jnp.int32)
-    store, _, ins, _ = _engine(keys.shape[0]).step(
-        s.store, ops, keys, req_ids.astype(jnp.uint64))
+    store, _, ins, _ = _store_step(s, ops, keys,
+                                   req_ids.astype(jnp.uint64))
     nt = s.next_ticket + jnp.sum(mask, dtype=jnp.uint32)
-    return Scheduler(arrivals=q, store=store, next_ticket=nt), ins
+    return Scheduler(arrivals=q, store=store, next_ticket=nt, res=s.res), ins
 
 
 def pop_min(s: Scheduler, k: int):
@@ -71,11 +163,31 @@ def pop_min(s: Scheduler, k: int):
     (s', req_ids[k], valid[k])."""
     ops = jnp.full((k,), OP_POPMIN, jnp.int32)
     zeros = jnp.zeros((k,), jnp.uint64)    # keys = shard hint; 1 shard here
-    store, vals, popped, _ = _engine(k).step(s.store, ops, zeros, zeros)
+    store, vals, popped, _ = _store_step(s, ops, zeros, zeros)
     # drain matching arrivals (keeps queue and index in sync)
     q, _, _ = pop_batch(s.arrivals, k, popped)
-    return Scheduler(arrivals=q, store=store, next_ticket=s.next_ticket), \
-        vals.astype(jnp.int32), popped
+    return Scheduler(arrivals=q, store=store, next_ticket=s.next_ticket,
+                     res=s.res), vals.astype(jnp.int32), popped
+
+
+def cancel_class(s: Scheduler, priority: int):
+    """Cancel EVERY pending request of one priority band in one plan: a
+    single OP_RANGE_DELETE lane over the band's contiguous key range
+    [priority << 32, (priority+1) << 32) — priority keys are
+    (priority, ticket) words, so a band is exactly one key interval. The
+    load-shedding / deadline-cancellation primitive (the serving engine
+    sheds the LOWEST band first under overload). Returns (s', cancelled
+    count). The arrival ring is not drained (see module docstring)."""
+    ops = jnp.asarray([OP_RANGE_DELETE] + [OP_NONE] * (CANCEL_LANES - 1),
+                      jnp.int32)
+    lo = make_priority_key(jnp.uint32(priority), jnp.uint32(0))
+    hi = make_priority_key(jnp.uint32(priority + 1), jnp.uint32(0))
+    keys = jnp.where(jnp.arange(CANCEL_LANES) == 0, lo, 0).astype(jnp.uint64)
+    vals = jnp.where(jnp.arange(CANCEL_LANES) == 0, hi, 0).astype(jnp.uint64)
+    store, out, ok, _ = _store_step(s, ops, keys, vals)
+    cancelled = int(np.asarray(out)[0]) if bool(np.asarray(ok)[0]) else 0
+    return Scheduler(arrivals=s.arrivals, store=store,
+                     next_ticket=s.next_ticket, res=s.res), cancelled
 
 
 def pending(s: Scheduler) -> jnp.ndarray:
@@ -85,6 +197,8 @@ def pending(s: Scheduler) -> jnp.ndarray:
 def metrics(s: Scheduler) -> dict:
     """The scheduler store's metrics plane (shard 0 of the `obs:pq`
     counters — pops, pop_empty, inserts_new, ... over
-    `obs.METRICS_SCHEMA`)."""
+    `obs.METRICS_SCHEMA`). The resilience counters in the schema are zeros
+    here; `serving.engine.Engine.resilience_metrics` merges the host-side
+    tallies in."""
     per = engine_mod.sharded_metrics(BACKEND, s.store)
     return {k: v[0] for k, v in per.items()}

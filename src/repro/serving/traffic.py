@@ -41,15 +41,32 @@ class TraceRequest:
     prompt: np.ndarray    # int32 tokens; leading pages come from the pool
     max_new: int
     priority: int         # 0 = most urgent (scheduler key high bits)
+    deadline: int = -1    # admission deadline in ticks from submit (<0: none)
 
 
 def make_trace(seed: int = 0, n_requests: int = 24, *, page_size: int = 8,
                vocab: int = 256, n_prefixes: int = 4, zipf_a: float = 1.3,
                burst_rate: float = 0.6, burst_mean: float = 2.0,
                prefix_pages=(1, 2), suffix_lens=(3, 6, 11),
-               max_new=(3, 5), inversion_every: int = 6) -> list[TraceRequest]:
+               max_new=(3, 5), inversion_every: int = 6,
+               deadline_frac: float = 0.0, deadline_slack=(4, 8),
+               overload_at: int | None = None,
+               overload_n: int = 0) -> list[TraceRequest]:
     """Deterministic heavy-traffic trace: list of `TraceRequest`, sorted by
-    (arrival, req_id). See the module docstring for what each knob shapes."""
+    (arrival, req_id). See the module docstring for what each knob shapes.
+
+    Degradation scenario knobs (docs/resilience.md; off by default, and
+    when off they draw NOTHING from the generator, so pre-existing traces
+    stay bit-identical):
+
+    * `deadline_frac` — that fraction of requests (seeded draw) carries an
+      admission deadline of `rng.choice(deadline_slack)` ticks; the engine
+      drops expired requests (`deadline_expired`).
+    * `overload_at` / `overload_n` — a seeded burst of `overload_n`
+      LOW-priority (band 2) requests all arriving at tick `overload_at`,
+      sized to push the backlog past a shedding engine's threshold (the
+      `shed` counter's workload).
+    """
     rng = np.random.default_rng(seed)
     # page-aligned shared-prefix pool (token blocks the prefix cache keys)
     longest = max(prefix_pages)
@@ -84,11 +101,26 @@ def make_trace(seed: int = 0, n_requests: int = 24, *, page_size: int = 8,
                 pool[pref, :npages * page_size],
                 rng.integers(1, vocab, suffix, dtype=np.int64).astype(np.int32),
             ])
+            dl = -1
+            if deadline_frac > 0.0 and rng.random() < deadline_frac:
+                dl = int(rng.choice(deadline_slack))
             out.append(TraceRequest(req_id=rid, arrival=tick, prompt=prompt,
                                     max_new=int(rng.choice(max_new)),
-                                    priority=prio))
+                                    priority=prio, deadline=dl))
             rid += 1
         tick += 1 + int(rng.geometric(burst_rate))
+    if overload_n > 0:
+        # seeded low-priority flood at one tick: enough simultaneous band-2
+        # arrivals to trip a shedding engine's backlog threshold
+        at = overload_at if overload_at is not None else 0
+        for j in range(overload_n):
+            suffix = int(rng.choice(suffix_lens))
+            prompt = rng.integers(1, vocab, suffix,
+                                  dtype=np.int64).astype(np.int32)
+            out.append(TraceRequest(req_id=rid, arrival=at, prompt=prompt,
+                                    max_new=int(rng.choice(max_new)),
+                                    priority=2))
+            rid += 1
     return sorted(out, key=lambda r: (r.arrival, r.req_id))
 
 
@@ -105,7 +137,8 @@ def replay(engine, trace: list[TraceRequest], max_steps: int = 256) -> dict:
         while i < len(trace) and trace[i].arrival <= t:
             r = trace[i]
             engine.submit(Request(req_id=r.req_id, prompt=r.prompt,
-                                  max_new=r.max_new, priority=r.priority))
+                                  max_new=r.max_new, priority=r.priority,
+                                  deadline=r.deadline))
             i += 1
         engine.step()
         t += 1

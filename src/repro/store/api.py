@@ -57,7 +57,11 @@ common contract first: this module defines it.
   deterministic jit-carried metrics plane and host trace spans. Execution mode is
   orthogonal: `store/exec.py` (`store_exec` config / `REPRO_STORE_EXEC`
   env var) picks jnp | interpret | pallas probes for ANY backend, with
-  bit-identical results.
+  bit-identical results. Fault tolerance is orthogonal too:
+  `store/resilience/` journals applied plans (seq-numbered, digest-chained)
+  against periodic state snapshots, so ANY backend or engine state is
+  bit-identically reconstructible by replaying the journal tail through
+  this same `apply` path (docs/resilience.md).
 
 Op codes are shared with the router (`core/ordered_sharded.py` re-exports
 them for compatibility): lane op `OP_NONE` means an idle lane.
@@ -75,6 +79,14 @@ OP_NONE, OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE = -1, 0, 1, 2, 3
 # the popped value, POPK the popped key. RANGE_DELETE reads the lane as
 # [keys, vals) = [lo, hi) and returns the deleted count.
 OP_POPMIN, OP_POPK, OP_RANGE_DELETE = 4, 5, 6
+
+# The closed set of executable lane op codes (OP_NONE is the idle lane, not
+# an op). The resilience layer (`store/resilience/`, docs/resilience.md)
+# treats any other value as a poisoned lane: `faults.sanitize_plan` masks it
+# to OP_NONE before the plan reaches a backend, journals the sanitized plan,
+# and re-submits the original lane intent on the next step.
+VALID_OPS = frozenset((OP_FIND, OP_INSERT, OP_DELETE, OP_RANGE,
+                       OP_POPMIN, OP_POPK, OP_RANGE_DELETE))
 
 
 class OpPlan(NamedTuple):

@@ -220,19 +220,31 @@ class StoreEngine:
         self.lanes = lanes
         self.backend = resolve(backend)
         self.exec_mode = exec_mode
+        self.pool_factor = pool_factor
         self.n_shards = int(math.prod(mesh.shape[a] for a in self.axis_names))
         self.sharding = store_sharding(mesh, self.axis_names)
         self._jit_step = jax.jit(make_store_step(mesh, self.axis_names, lanes,
                                                  backend=self.backend,
                                                  pool_factor=pool_factor,
                                                  exec_mode=exec_mode))
+        # host-side step sequence number: incremented once per `step()` call,
+        # surfaced in `stats()` and the "step" span. The resilience journal
+        # keys its entries off this counter (`journal.py` restores it on
+        # `restore`), and traces gain numbered steps. Deliberately NOT a
+        # state leaf: engine state must stay leaf-for-leaf identical to a
+        # broadcast backend state (the RESIDENCY-OK contract).
+        self.seq = 0
 
     def step(self, state, ops, keys, vals):
         """One batched-op step, wrapped in the `"step"` trace span (real
         per-batch wall time when a `obs.tracing()` block is active — the
-        timeline row `tools/trace_export.py` exports)."""
+        timeline row `tools/trace_export.py` exports). Each call advances
+        the host-side `seq` counter; the span carries the seq of the step
+        it timed."""
+        seq = self.seq
+        self.seq += 1
         with obs.span("step", backend=self.backend.name, lanes=self.lanes,
-                      shards=self.n_shards):
+                      shards=self.n_shards, seq=seq):
             return self._jit_step(state, ops, keys, vals)
 
     def init(self, capacity_per_shard: int, **kw):
@@ -245,7 +257,13 @@ class StoreEngine:
                                        pool_factor=pool_factor))
 
     def stats(self, state) -> dict:
-        return sharded_stats(self.backend, state)
+        """Per-shard `STATS_SCHEMA` arrays plus the engine-level `"seq"`
+        (host step counter — how many steps this engine has applied; the
+        journal's next entry number). `"seq"` is engine metadata, not part
+        of `api.STATS_SCHEMA`: backend stats stay schema-exact."""
+        out = sharded_stats(self.backend, state)
+        out["seq"] = self.seq
+        return out
 
     def metrics(self, state) -> dict:
         """Per-shard metrics plane (`sharded_metrics`); raises unless the

@@ -79,7 +79,41 @@ METRICS_SCHEMA = (
     "pops", "pop_empty",
     # engine routing, per shard (store/engine.py)
     "routed_ops", "routed_bytes",
+    # fault tolerance (store/resilience/, serving deadlines/overload).
+    # These six are DELIBERATELY never accumulated inside a store state:
+    # the journal contract says snapshot+replay reproduces the fault-free
+    # state bit for bit, and counters *about* faults cannot live inside
+    # the very plane a recovery must reproduce. They are tallied by the
+    # resilience layer (ResilientEngine / the scheduler's resilience
+    # record) and merged into the `metrics()` READ view by
+    # `merge_resilience` — still deterministic (pure functions of the
+    # seeded fault plan + trace), still schema-closed, still docs-gated.
+    "faults_injected", "recoveries", "replayed_ops",
+    "deadline_expired", "shed", "retries",
 )
+
+# the resilience-layer subset of METRICS_SCHEMA (glossary in
+# docs/resilience.md): host-tallied, merged into metrics views
+RESILIENCE_SCHEMA = ("faults_injected", "recoveries", "replayed_ops",
+                     "deadline_expired", "shed", "retries")
+
+
+def resilience_zero() -> Dict[str, int]:
+    """A zeroed host-side resilience tally (plain ints — these counters
+    never enter a jitted state; see the METRICS_SCHEMA note above)."""
+    return {k: 0 for k in RESILIENCE_SCHEMA}
+
+
+def merge_resilience(metrics: Dict[str, Any],
+                     tally: Dict[str, int]) -> Dict[str, Any]:
+    """A metrics view with a host-side resilience tally folded in (values
+    added to the store plane's zeros; non-resilience keys pass through)."""
+    unknown = set(tally) - set(RESILIENCE_SCHEMA)
+    if unknown:
+        raise ValueError(f"resilience tally keys {sorted(unknown)} not in "
+                         f"obs.RESILIENCE_SCHEMA")
+    return {k: (v + tally[k] if k in tally else v)
+            for k, v in metrics.items()}
 
 # host-side serving-engine counters (serving/engine.py `Engine.metrics()`)
 SERVING_SCHEMA = ("ring_depth", "prefix_hits", "prefix_lookups",
@@ -91,7 +125,11 @@ SERVING_SCHEMA = ("ring_depth", "prefix_hits", "prefix_lookups",
 # traces from different runs line up in Perfetto
 SPAN_TAXONOMY = ("route", "step", "find", "update", "insert", "delete",
                  "pop", "demote", "promote", "compact", "flush", "scan",
-                 "admit", "prefill", "decode")
+                 "admit", "prefill", "decode",
+                 # fault tolerance (store/resilience/restore.py): wraps a
+                 # quarantined shard's snapshot+journal rebuild — args carry
+                 # the shard id, journal replay length, and recovery mode
+                 "recover")
 
 # bytes one routed op carries through the engine's all_to_all queues:
 # key u64 + val u64 + op i32 + origin i32 (core/routing.py lane payload)

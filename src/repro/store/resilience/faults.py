@@ -1,0 +1,167 @@
+"""Seeded deterministic fault injection for the store engine.
+
+Chaos testing with the determinism turned UP instead of off: a `FaultPlan`
+is a pure function of its seed, so "the run where shard 3 dies at step 5"
+is a reproducible artifact, not a flake. Faults are injected at the engine
+step boundary by `store.resilience.restore.ResilientEngine` (never inside a
+kernel — the corruption models infrastructure failure, not miscompiled
+math), and every injection is tallied in the `faults_injected` counter of
+the resilience tally (`obs.RESILIENCE_SCHEMA`).
+
+Three fault kinds (schema table in docs/resilience.md):
+
+* ``shard_drop`` — shard `shard`'s state slice is zeroed at step `step`,
+  modeling a lost NUMA node / device. Detected by the per-step health
+  epoch (`state_alive`: a live store state always has nonzero leaves —
+  key planes are KEY_INF-filled from init — so an all-zero slice is
+  unambiguous death), then recovered from snapshot + journal.
+* ``poison`` — lane `lane`'s op code is overwritten with `POISON_OP`
+  (outside `api.VALID_OPS`) on the wire copy of the plan, modeling
+  in-flight corruption. Detected by `sanitize_ops`; repaired by re-reading
+  the write-ahead journaled intent (counted in `retries`).
+* ``stall`` — a maintenance stall (e.g. spill compaction) charging `ticks`
+  virtual ticks to the engine's stall clock. Determinism makes a stall
+  pure latency — it cannot corrupt state — so recovery is accounting:
+  the serving layer's deadline clock absorbs the ticks.
+
+`REPRO_FAULTS=<seed>` (read by `default_seed`) re-seeds the suite-level
+fault plans — the CI chaos lane runs the resilience + serving suites under
+a non-default seed in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, List, NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.store.api import OP_NONE, VALID_OPS
+
+# the poisoned-lane op code: far outside VALID_OPS, recognizable in dumps
+POISON_OP = 113
+
+FAULT_KINDS = ("shard_drop", "poison", "stall")
+
+
+class Fault(NamedTuple):
+    """One scheduled fault. `shard` is used by shard_drop, `lane` by
+    poison, `ticks` by stall; the unused fields are -1/0."""
+    kind: str
+    step: int
+    shard: int = -1
+    lane: int = -1
+    ticks: int = 0
+
+
+class FaultPlan:
+    """The deterministic fault schedule: seed in, same faults out, always.
+    `at(step)` returns the faults due at an engine step (possibly empty)."""
+
+    def __init__(self, seed: int, faults: Sequence[Fault]):
+        self.seed = int(seed)
+        self.faults = sorted(faults, key=lambda f: (f.step, f.kind, f.shard,
+                                                    f.lane))
+        self._by_step: Dict[int, List[Fault]] = {}
+        for f in self.faults:
+            self._by_step.setdefault(f.step, []).append(f)
+
+    def at(self, step: int) -> List[Fault]:
+        return self._by_step.get(int(step), [])
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    def __repr__(self) -> str:
+        return f"FaultPlan(seed={self.seed}, faults={self.faults!r})"
+
+
+def default_seed(fallback: int = 0) -> int:
+    """The suite-level fault seed: `REPRO_FAULTS` env var when set (the CI
+    chaos lane's knob), else `fallback`."""
+    v = os.environ.get("REPRO_FAULTS", "").strip()
+    return int(v) if v else int(fallback)
+
+
+def make_fault_plan(seed: int, n_steps: int, n_shards: int, lanes: int, *,
+                    n_faults: int = 3,
+                    kinds: Sequence[str] = FAULT_KINDS) -> FaultPlan:
+    """Draw `n_faults` faults over steps [1, n_steps) from one seeded
+    generator. Step 0 is excluded so there is always a pre-fault snapshot
+    to recover from; at most one shard_drop is scheduled per step (two
+    simultaneous drops of the same journal epoch are recovered one at a
+    time anyway, but keeping steps distinct keeps test expectations
+    legible)."""
+    if n_steps < 2:
+        raise ValueError("need n_steps >= 2 (step 0 is fault-free)")
+    bad = set(kinds) - set(FAULT_KINDS)
+    if bad:
+        raise ValueError(f"unknown fault kinds {sorted(bad)}; "
+                         f"valid: {FAULT_KINDS}")
+    rng = np.random.default_rng(seed)
+    out: List[Fault] = []
+    drop_steps: set[int] = set()
+    for _ in range(n_faults):
+        kind = str(rng.choice(list(kinds)))
+        step = int(rng.integers(1, n_steps))
+        if kind == "shard_drop":
+            while step in drop_steps:
+                step = int(rng.integers(1, n_steps))
+            drop_steps.add(step)
+            out.append(Fault(kind=kind, step=step,
+                             shard=int(rng.integers(0, n_shards))))
+        elif kind == "poison":
+            out.append(Fault(kind=kind, step=step,
+                             lane=int(rng.integers(0, lanes))))
+        else:
+            out.append(Fault(kind=kind, step=step,
+                             ticks=int(rng.integers(1, 5))))
+    return FaultPlan(seed, out)
+
+
+# ---------------------------------------------------------------------------
+# injection primitives
+# ---------------------------------------------------------------------------
+
+def inject_shard_drop(state, shard: int):
+    """Zero shard `shard`'s slice of every state leaf (leading dim = shard
+    dim, the engine's layout). The zeroed slice is dead by the
+    `state_alive` criterion — live stores carry KEY_INF-filled key planes
+    from `init` on."""
+    return jax.tree.map(
+        lambda x: x.at[shard].set(jnp.zeros_like(x[shard])), state)
+
+
+def poison_ops(ops, lane: int):
+    """The wire-corruption model: lane `lane`'s op code becomes POISON_OP."""
+    return jnp.asarray(ops).at[lane].set(jnp.int32(POISON_OP))
+
+
+def sanitize_ops(ops):
+    """Split a wire plan's op codes into (clean, poisoned_mask): codes
+    outside `api.VALID_OPS` (and not the idle OP_NONE) are masked to
+    OP_NONE. Host-side numpy — the sanitizer runs before the plan enters
+    the jitted step."""
+    ops = np.asarray(jax.device_get(ops), np.int32)
+    ok = np.isin(ops, np.asarray(sorted(VALID_OPS), np.int32)) \
+        | (ops == OP_NONE)
+    clean = np.where(ok, ops, OP_NONE).astype(np.int32)
+    return clean, ~ok
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _alive_leaf(x, n_shards: int):
+    return jnp.any((x != 0).reshape(n_shards, -1), axis=1)
+
+
+def state_alive(state, n_shards: int) -> np.ndarray:
+    """Per-shard liveness probe: shard s is alive iff ANY leaf has a
+    nonzero element in its slice. One fused any-reduce per leaf; the
+    result is the health epoch's heartbeat (ResilientEngine marks shards
+    whose heartbeat lags the epoch as failed)."""
+    leaves = jax.tree.leaves(state)
+    per = [np.asarray(_alive_leaf(x, n_shards)) for x in leaves]
+    return np.any(np.stack(per, 0), axis=0)

@@ -1,0 +1,209 @@
+"""Write-ahead op-plan journal + state snapshots: determinism as recovery.
+
+The whole reproduction's contract — one op stream, one bit-identical state,
+in every exec mode and sharding — makes fault tolerance almost free: if we
+record (a) a periodic SNAPSHOT of the state pytree and (b) every `OpPlan`
+batch applied after it, then any later state is reconstructible by replaying
+the journal tail through the SAME `apply` path the live run used. No fuzzy
+"close enough" recovery: `restore()` reproduces the state digest and the
+metrics-plane digest bit for bit (tests/test_resilience.py kills the run
+after every batch and proves it; the RECOVER-OK lane of
+tests/multidev/store_prog.py proves it on an 8-device mesh).
+
+Three pieces (formats documented in docs/resilience.md):
+
+* `JournalEntry` — one applied batch: `seq` (the engine's host step
+  counter, `StoreEngine.seq`), the plan arrays as host numpy copies, and a
+  chained blake2b digest over (previous digest, seq, arrays). The chain
+  makes truncation/reordering/corruption of the journal detectable
+  (`Journal.verify()`), the same way the digest chain in a replicated log
+  does.
+* `Snapshot` — `(seq, leaves, treedef, digest)`: the state pytree flattened
+  to host numpy leaves. `state_digest()` is the canonical digest used
+  everywhere a test says "bit-identical state".
+* `restore(eng, snapshot, entries)` — device_put the snapshot back
+  (re-sharded), reset `eng.seq`, and replay the tail through `eng.step`.
+  Because replay IS the normal path, anything the engine guarantees
+  (routing determinism, metrics bit-identity, exec-mode parity) transfers
+  to the restored state for free.
+
+The journal is WRITE-AHEAD relative to the wire: `ResilientEngine.step`
+journals the caller's intent before transmitting the plan, so a poisoned
+op lane (corruption in flight, detected as an op code outside
+`api.VALID_OPS`) is repaired by re-reading the journaled intent — see
+store/resilience/restore.py and faults.py.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, List, NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# chain seed: a fixed tag, not empty, so an empty journal still has a
+# well-defined head digest distinct from "no journal"
+GENESIS = hashlib.blake2b(b"repro.store.resilience/journal",
+                          digest_size=16).hexdigest()
+
+
+def _chain(prev_hex: str, seq: int, arrays: Sequence[np.ndarray]) -> str:
+    """blake2b over (previous digest, seq, each array's dtype+shape+bytes) —
+    the per-entry link of the journal's digest chain."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(bytes.fromhex(prev_hex))
+    h.update(int(seq).to_bytes(8, "little", signed=True))
+    for a in arrays:
+        a = np.asarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(np.asarray(a.shape, np.int64).tobytes())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def state_digest(state) -> str:
+    """Canonical digest of a state pytree (leaves pulled to host). Two
+    states are "bit-identical" iff their digests match — the equality every
+    resilience test asserts."""
+    leaves = [np.asarray(x) for x in jax.device_get(jax.tree.leaves(state))]
+    return _chain(GENESIS, len(leaves), leaves)
+
+
+class JournalEntry(NamedTuple):
+    """One applied batch: plan arrays as host copies + the chain digest."""
+    seq: int
+    ops: np.ndarray      # [K] int32 (OP_NONE lanes idle; masked lanes too)
+    keys: np.ndarray     # [K] uint64
+    vals: np.ndarray     # [K] uint64
+    digest: str
+
+    @property
+    def n_ops(self) -> int:
+        """Valid (executable) lanes this entry carries."""
+        return int(np.sum(self.ops >= 0))
+
+
+class Snapshot(NamedTuple):
+    """A state pytree flattened to host numpy leaves at step `seq`."""
+    seq: int
+    leaves: tuple
+    treedef: Any
+    digest: str
+
+
+def take_snapshot(state, seq: int) -> Snapshot:
+    """Flatten + device_get a state pytree (any backend, any sharding —
+    leaves keep their leading shard dim if present)."""
+    leaves, treedef = jax.tree.flatten(state)
+    host = tuple(np.asarray(x) for x in jax.device_get(leaves))
+    return Snapshot(seq=int(seq), leaves=host, treedef=treedef,
+                    digest=_chain(GENESIS, len(host), host))
+
+
+def snapshot_state(snap: Snapshot, sharding=None):
+    """Rebuild the device state pytree from a snapshot (optionally re-laid
+    onto a NamedSharding — restoring onto a fresh mesh is the point)."""
+    state = jax.tree.unflatten(snap.treedef,
+                               [jnp.asarray(x) for x in snap.leaves])
+    if sharding is not None:
+        state = jax.device_put(state, sharding)
+    return state
+
+
+class Journal:
+    """Append-only, digest-chained record of applied `OpPlan` batches.
+
+    Entries are seq-contiguous from `base_seq`; `append` enforces it, so a
+    journal can only describe one gap-free suffix of the engine's step
+    sequence — exactly what replay needs. The chain head is `head_digest`;
+    `verify()` recomputes every link and raises on any tampering.
+    """
+
+    def __init__(self, base_seq: int = 0):
+        self.base_seq = int(base_seq)
+        self.entries: List[JournalEntry] = []
+        self.head_digest = GENESIS
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def next_seq(self) -> int:
+        return self.base_seq + len(self.entries)
+
+    def append(self, seq: int, ops, keys, vals) -> JournalEntry:
+        if int(seq) != self.next_seq:
+            raise ValueError(f"journal expects seq {self.next_seq}, "
+                             f"got {seq} (entries must be gap-free)")
+        ops = np.asarray(jax.device_get(ops), np.int32).copy()
+        keys = np.asarray(jax.device_get(keys), np.uint64).copy()
+        vals = np.asarray(jax.device_get(vals), np.uint64).copy()
+        self.head_digest = _chain(self.head_digest, int(seq),
+                                  (ops, keys, vals))
+        e = JournalEntry(seq=int(seq), ops=ops, keys=keys, vals=vals,
+                         digest=self.head_digest)
+        self.entries.append(e)
+        return e
+
+    def tail(self, from_seq: int) -> List[JournalEntry]:
+        """Entries with seq >= from_seq (what a restore from a snapshot
+        taken at `from_seq` replays)."""
+        return [e for e in self.entries if e.seq >= from_seq]
+
+    def verify(self) -> bool:
+        """Recompute the whole chain; raises ValueError at the first entry
+        whose digest does not match (truncation at the end is legal — a
+        shorter journal is just an earlier prefix)."""
+        prev = GENESIS
+        for i, e in enumerate(self.entries):
+            want = _chain(prev, e.seq, (e.ops, e.keys, e.vals))
+            if e.digest != want:
+                raise ValueError(f"journal digest chain broken at entry {i} "
+                                 f"(seq {e.seq})")
+            if e.seq != self.base_seq + i:
+                raise ValueError(f"journal seq gap at entry {i}: "
+                                 f"{e.seq} != {self.base_seq + i}")
+            prev = e.digest
+        return True
+
+
+def restore(eng, snap: Snapshot, entries: Sequence[JournalEntry]):
+    """Snapshot + journal tail -> (state, replayed_ops), through the normal
+    `eng.step` path.
+
+    `eng` is a `store.engine.StoreEngine` (or anything with `.step`,
+    `.sharding`, `.seq`). The engine's host seq counter is reset to the
+    snapshot's, each entry is replayed in order (entry seq must line up),
+    and the returned state is bit-identical to the state the live run had
+    after the last replayed entry — digest-checked by the callers in
+    tests/test_resilience.py and the RECOVER-OK multidev lane.
+    """
+    state = snapshot_state(snap, getattr(eng, "sharding", None))
+    eng.seq = snap.seq
+    replayed = 0
+    for e in entries:
+        if e.seq != eng.seq:
+            raise ValueError(f"replay expects seq {eng.seq}, entry has "
+                             f"{e.seq} (snapshot/journal mismatch)")
+        state, _, _, _ = eng.step(state, jnp.asarray(e.ops),
+                                  jnp.asarray(e.keys), jnp.asarray(e.vals))
+        replayed += e.n_ops
+    return state, replayed
+
+
+def replay_plans(apply_fn, state, entries: Sequence[JournalEntry],
+                 mask_from_ops: bool = True):
+    """Generic single-instance replay for DIRECT backends (no engine): fold
+    `apply_fn(state, plan)` over the journal tail. Used by the differential
+    fault-interleave test and the scheduler recovery path, where the journal
+    was recorded at plan level rather than engine level."""
+    from repro.store.api import make_plan
+    replayed = 0
+    for e in entries:
+        mask = (e.ops >= 0) if mask_from_ops else np.ones(e.ops.shape, bool)
+        state, _ = apply_fn(state, make_plan(e.ops, e.keys, e.vals,
+                                             mask=mask))
+        replayed += e.n_ops
+    return state, replayed

@@ -550,6 +550,146 @@ def check_pq(mesh) -> None:
           f"modes=jnp,interpret")
 
 
+def check_recover(mesh, backend: str = "obs:tiered3/lru") -> None:
+    """RECOVER-OK: the resilience layer on the 8-device mesh.
+
+    (a) snapshot + journal `restore` onto a FRESH engine reproduces the
+    fault-free run's state digest and full per-shard metrics plane;
+    (b) a mid-trace shard drop (shard 3, step 3) recovered in sync mode
+    leaves every round's results AND the final state/metrics digests
+    bit-identical to the fault-free run;
+    (c) degraded mode: healthy shards keep serving (their lanes match the
+    fault-free run at every step) while the dead shard rebuilds one journal
+    entry per tick; the deferred lanes' true answers land in `completions`
+    equal to the fault-free answers, and a post-run FIND sweep over every
+    key agrees between the two runs."""
+    from repro.store import resilience as R
+
+    total = N_SHARDS * LANES
+    n_rounds = 6
+    rng = np.random.default_rng(211)
+    pools = [np.unique((np.uint64(s) << np.uint64(61))
+                       | rng.integers(1, 2**61, 24, dtype=np.uint64))
+             for s in range(N_SHARDS)]
+    rounds = []
+    for _ in range(n_rounds):
+        ops = rng.choice([OP_FIND, OP_INSERT, OP_DELETE], size=total,
+                         p=[0.4, 0.5, 0.1]).astype(np.int32)
+        keys = np.concatenate([
+            rng.choice(pools[s], LANES, replace=False)
+            for s in range(N_SHARDS)])
+        rng.shuffle(keys)
+        rounds.append((ops, keys))
+
+    init_kw = dict(hot_bucket=4, hot_frac=8)
+
+    def fresh():
+        eng = StoreEngine(mesh, AXES, LANES, backend=backend, pool_factor=8)
+        state = jax.device_put(eng.init(64, **init_kw), eng.sharding)
+        return eng, state
+
+    put = lambda eng, x: jax.device_put(jnp.asarray(x), eng.sharding)
+
+    # fault-free reference run
+    eng0, state0 = fresh()
+    ff_outs = []
+    for ops, keys in rounds:
+        state0, res, ok, dropped = eng0.step(state0, put(eng0, ops),
+                                             put(eng0, keys),
+                                             put(eng0, keys + 3))
+        assert int(dropped) == 0
+        ff_outs.append((np.asarray(ok).copy(), np.asarray(res).copy()))
+    ff_digest = R.state_digest(state0)
+    ff_metrics = {k: v.tolist() for k, v in eng0.metrics(state0).items()}
+
+    # (a) full restore onto a fresh engine: 8-device snapshot + journal
+    eng1, state1 = fresh()
+    snap = R.take_snapshot(state1, 0)
+    j = R.Journal(base_seq=0)
+    for r, (ops, keys) in enumerate(rounds):
+        j.append(r, ops, keys, keys + 3)
+    assert j.verify()
+    eng2, _ = fresh()
+    restored, replayed = R.restore(eng2, snap, j.entries)
+    assert replayed == sum(e.n_ops for e in j.entries)
+    assert R.state_digest(restored) == ff_digest
+    assert {k: v.tolist()
+            for k, v in eng2.metrics(restored).items()} == ff_metrics
+
+    # (b) mid-trace shard drop, sync recovery: bit-identical throughout
+    eng3, state3 = fresh()
+    reng = R.ResilientEngine(
+        eng3, snapshot_every=2,
+        fault_plan=R.FaultPlan(0, [R.Fault("shard_drop", 3, shard=3)]))
+    for r, (ops, keys) in enumerate(rounds):
+        state3, res, ok, dropped = reng.step(state3, put(eng3, ops),
+                                             put(eng3, keys),
+                                             put(eng3, keys + 3))
+        assert int(dropped) == 0
+        ok_f, v_f = ff_outs[r]
+        assert (np.asarray(ok) == ok_f).all(), ("sync", r)
+        assert (np.asarray(res) == v_f).all(), ("sync", r)
+    assert R.state_digest(state3) == ff_digest
+    assert {k: v.tolist()
+            for k, v in eng3.metrics(state3).items()} == ff_metrics
+    assert reng.tally["faults_injected"] == 1
+    assert reng.tally["recoveries"] == 1
+    assert reng.tally["replayed_ops"] > 0
+    assert reng.journal.verify()
+
+    # (c) degraded mode: drop shard 3 at step 3 with the last snapshot at
+    # seq 0 and a one-entry-per-tick replay budget -> the rebuild spans
+    # steps 3..5 while the healthy shards keep serving
+    eng4, state4 = fresh()
+    reng4 = R.ResilientEngine(
+        eng4, snapshot_every=4, mode="degraded", replay_per_tick=1,
+        fault_plan=R.FaultPlan(0, [R.Fault("shard_drop", 3, shard=3)]))
+    owner_all = []
+    for r, (ops, keys) in enumerate(rounds):
+        owner = (keys >> np.uint64(61)).astype(np.int32)
+        owner_all.append(owner)
+        state4, res, ok, _ = reng4.step(state4, put(eng4, ops),
+                                        put(eng4, keys), put(eng4, keys + 3))
+        ok_h, v_h = np.asarray(ok), np.asarray(res)
+        ok_f, v_f = ff_outs[r]
+        deferred = (owner == 3) & (ops >= 0) if r >= 3 else \
+            np.zeros(total, bool)
+        live = ~deferred
+        assert (ok_h[live] == ok_f[live]).all(), ("degraded", r)
+        assert (v_h[live] == v_f[live]).all(), ("degraded", r)
+        assert not ok_h[deferred].any(), ("degraded", r)   # visibly deferred
+    assert reng4.quarantine is None                        # rebuild done
+    assert reng4.tally["recoveries"] == 1
+    # every deferred lane completed with the fault-free answer
+    n_def = 0
+    for (seq, lane), (cok, cval) in reng4.completions.items():
+        ok_f, v_f = ff_outs[seq]
+        assert cok == bool(ok_f[lane]), ("completion", seq, lane)
+        assert cval == int(v_f[lane]), ("completion", seq, lane)
+        n_def += 1
+    assert n_def == sum(int(((o == 3) & (rounds[r][0] >= 0)).sum())
+                        for r, o in enumerate(owner_all) if r >= 3)
+    # content sweep: FIND every pool key on both final states
+    for s in range(N_SHARDS):
+        for chunk in np.array_split(pools[s], max(1, len(pools[s]) // LANES)):
+            probe = np.zeros(total, np.uint64)
+            probe[:len(chunk)] = chunk
+            fops = np.full(total, -1, np.int32)
+            fops[:len(chunk)] = OP_FIND
+            _, v_a, ok_a, _ = eng0.step(state0, put(eng0, fops),
+                                        put(eng0, probe),
+                                        put(eng0, np.zeros(total, np.uint64)))
+            _, v_b, ok_b, _ = eng4.step(state4, put(eng4, fops),
+                                        put(eng4, probe),
+                                        put(eng4, np.zeros(total, np.uint64)))
+            assert (np.asarray(ok_a) == np.asarray(ok_b)).all(), ("sweep", s)
+            m = np.asarray(ok_a)
+            assert (np.asarray(v_a)[m] == np.asarray(v_b)[m]).all(), \
+                ("sweep", s)
+    print(f"RECOVER-OK backend={backend} shards={N_SHARDS} "
+          f"sync_digest=match degraded_completions={n_def}")
+
+
 def main() -> int:
     mesh = jax.make_mesh((2, 4), AXES)
     for backend in BACKENDS:
@@ -563,6 +703,7 @@ def main() -> int:
     check_bskip(mesh)
     check_metrics(mesh)
     check_pq(mesh)
+    check_recover(mesh)
     return 0
 
 

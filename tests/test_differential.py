@@ -219,6 +219,51 @@ def test_differential_pq_pops(stream):
                                          OP_POPK), stream, salt=2)
 
 
+@settings(max_examples=10, deadline=None)
+@given(STREAM)
+def test_differential_fault_interleaved_restore(stream):
+    """Fault-interleaved oracle run: every plan is write-ahead journaled
+    (store.resilience.Journal); mid-stream the backend state is LOST and
+    rebuilt by `replay_plans` over the journal — the rebuilt state must be
+    bit-identical (state_digest) to the lost one, and the remainder of the
+    stream must keep agreeing with the oracle as if nothing happened."""
+    from repro.store import resilience as R
+
+    name = "det_skiplist"
+    be = get_backend(name)
+    oracle = DictOracle()
+    stt = be.init(256)
+    journal = R.Journal(base_seq=0)
+    plans = _plans(stream, BASIC_OPS + (OP_RANGE_DELETE,), 3)
+    crash_at = max(1, len(plans) // 2)
+    for rnd, (ops, keys, vals, mask) in enumerate(plans):
+        if rnd == crash_at:
+            # the crash: state gone; snapshotless rebuild from seq 0
+            pre = R.state_digest(stt)
+            stt = None
+            rebuilt, replayed = R.replay_plans(_step(name), be.init(256),
+                                               journal.entries)
+            assert R.state_digest(rebuilt) == pre
+            assert replayed == sum(e.n_ops for e in journal.entries)
+            stt = rebuilt
+        # journal the intent with the lane mask folded in (a masked lane
+        # is contractually a no-op, so OP_NONE is the same plan)
+        eff_ops = np.where(mask, ops, OP_NONE).astype(np.int32)
+        journal.append(rnd, eff_ops, keys, vals)
+        want_ok, want_vals = oracle.apply(ops, keys, vals, mask)
+        stt, res = _step(name)(stt, make_plan(ops, keys, vals, mask))
+        assert (np.asarray(res.ok) == want_ok).all(), rnd
+        assert (np.asarray(res.vals) == want_vals).all(), rnd
+    assert journal.verify()
+    # the surviving state still matches the oracle's ordered content
+    lo, hi = jnp.asarray([0], jnp.uint64), jnp.asarray([KEY_INF], jnp.uint64)
+    cnt, ks, vs, valid = be.scan(stt, lo, hi, 64)
+    rows = [(int(k), int(v)) for k, v, m in
+            zip(np.asarray(ks[0]), np.asarray(vs[0]), np.asarray(valid[0]))
+            if m]
+    assert rows == sorted(oracle.d.items())
+
+
 def test_oracle_is_not_vacuous():
     """The harness must FAIL on a wrong implementation: a backend that
     drops deletes diverges from the oracle on the very first find."""

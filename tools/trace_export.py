@@ -59,21 +59,29 @@ def to_chrome_trace(tracer, meta: dict | None = None) -> dict:
 
 
 def record_demo_trace(backend: str = "obs:tiered3/lru", steps: int = 8,
-                      lanes: int = 64):
+                      lanes: int = 64, fault_step: int | None = None):
     """Run a small churn workload on a 1-device engine under `tracing()`;
     returns (tracer, metrics dict of plain ints). The spans cover the whole
     taxonomy the engine path exercises: "step" per batch (real wall time),
     and the trace-time "route"/"insert"/"delete"/"find"/"demote"/
-    "promote"/"compact" phases from the first step's trace."""
+    "promote"/"compact" phases from the first step's trace. With
+    `fault_step` set, the engine is wrapped in a `ResilientEngine` with a
+    shard-drop at that step, so the timeline also shows a real "recover"
+    span (snapshot + journal rebuild) mid-trace."""
     import numpy as np
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh
     from repro.store import obs
+    from repro.store import resilience as R
     from repro.store.engine import StoreEngine
 
     mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
     eng = StoreEngine(mesh, ("d",), lanes=lanes, backend=backend)
+    drive = eng
+    if fault_step is not None:
+        fplan = R.FaultPlan(0, [R.Fault("shard_drop", fault_step, shard=0)])
+        drive = R.ResilientEngine(eng, snapshot_every=2, fault_plan=fplan)
     state = jax.device_put(eng.init(max(4 * lanes, 64), hot_bucket=4,
                                     hot_frac=8), eng.sharding)
     rng = np.random.default_rng(0)
@@ -84,8 +92,11 @@ def record_demo_trace(backend: str = "obs:tiered3/lru", steps: int = 8,
                 rng.integers(1, 4 * lanes, lanes).astype(np.uint64))
             vals = jnp.asarray(
                 rng.integers(1, 1 << 20, lanes).astype(np.uint64))
-            state, _, _, _ = eng.step(state, ops, keys, vals)
-    metrics = {k: int(v[0]) for k, v in eng.metrics(state).items()}
+            state, _, _, _ = drive.step(state, ops, keys, vals)
+    if fault_step is not None:
+        metrics = {k: int(v) for k, v in drive.metrics(state).items()}
+    else:
+        metrics = {k: int(v[0]) for k, v in eng.metrics(state).items()}
     return tracer, metrics
 
 
@@ -99,6 +110,10 @@ def main(argv: list[str]) -> int:
                          "obs:tiered3/lru)")
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--lanes", type=int, default=64)
+    ap.add_argument("--fault-step", type=int, default=None,
+                    help="inject a shard drop at this step (wraps the "
+                         "engine in a ResilientEngine) so the timeline "
+                         "includes a 'recover' span")
     args = ap.parse_args(argv[1:])
     if not args.backend.startswith("obs:"):
         ap.error("--backend must be obs:-prefixed (the demo embeds the "
@@ -106,7 +121,8 @@ def main(argv: list[str]) -> int:
 
     sys.path.insert(0, os.path.join(ROOT, "src"))
     tracer, metrics = record_demo_trace(backend=args.backend,
-                                        steps=args.steps, lanes=args.lanes)
+                                        steps=args.steps, lanes=args.lanes,
+                                        fault_step=args.fault_step)
     payload = to_chrome_trace(tracer, meta={"backend": args.backend,
                                             "metrics": metrics})
     with open(args.out, "w") as f:
